@@ -1,0 +1,63 @@
+//! §6 hardware claim: turn measured bit-width trajectories into training
+//! speedup on Na & Mukhopadhyay's flexible MAC unit (cycle model).
+//!
+//! Runs a short qedps training to get a *real* trajectory, then prices it
+//! — and a sweep of static word lengths — on the MAC model.
+//!
+//! ```bash
+//! cargo run --release --example hardware_speedup
+//! ```
+
+use qedps::config::ExperimentConfig;
+use qedps::coordinator::figures;
+use qedps::fixedpoint::Format;
+use qedps::macsim::{self, MacUnit};
+use qedps::policy::PrecState;
+use qedps::runtime::Runtime;
+use qedps::trainer::run_experiment;
+
+fn main() -> anyhow::Result<()> {
+    qedps::util::logging::init();
+    let mut rt = Runtime::create()?;
+
+    // static sweep (the MAC's ideal-case table)
+    let unit = MacUnit::default();
+    println!("flexible MAC (8x8 granules): static word-length sweep");
+    println!("{:>6} {:>10}", "bits", "speedup");
+    for bits in [32, 24, 20, 16, 14, 12, 8] {
+        println!("{bits:>6} {:>9.2}x", unit.speedup_vs_32(bits));
+    }
+
+    // measured trajectory
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp".into();
+    cfg.iters = 400;
+    cfg.train_n = 6_000;
+    cfg.test_n = 1_000;
+    cfg.eval_every = 0;
+    cfg.log_every = 1; // dense trajectory for accurate pricing
+    let hist = run_experiment(&mut rt, &cfg)?;
+
+    let layers = figures::model_layers(&rt, &cfg.model)?;
+    let traj: Vec<PrecState> = hist.train.iter().map(|r| r.prec).collect();
+    let speedup = macsim::trajectory_speedup(&unit, &layers, &traj);
+    let s = hist.summary();
+    println!("\nmeasured qedps trajectory ({} iters):", cfg.iters);
+    println!("  mean bits (w/a/g): {:.1}/{:.1}/{:.1}",
+             s.mean_weight_bits, s.mean_act_bits, s.mean_grad_bits);
+    println!("  training speedup on flexible MAC vs fp32: {speedup:.2}x");
+    println!("  (paper §6: lower bit-width than Na & Mukhopadhyay => larger speedup)");
+
+    // what-if: the paper's headline averages
+    let headline = PrecState {
+        weights: Format::new(2, 14),
+        acts: Format::new(2, 12),
+        grads: Format::new(8, 16),
+    };
+    let cyc = macsim::iteration_cycles(&unit, &layers, &headline);
+    let base = macsim::iteration_cycles(&unit, &layers,
+                                        &PrecState::uniform(Format::new(16, 16)));
+    println!("\npaper-headline precision (16b w / 14b a / 24b g): {:.2}x",
+             base as f64 / cyc as f64);
+    Ok(())
+}

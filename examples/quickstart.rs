@@ -1,0 +1,42 @@
+//! Quickstart: train a small MLP with quantization-error-driven dynamic
+//! precision scaling, then print the headline numbers.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use qedps::config::ExperimentConfig;
+use qedps::runtime::Runtime;
+use qedps::trainer::run_experiment;
+
+fn main() -> anyhow::Result<()> {
+    qedps::util::logging::init();
+
+    // The paper's hyperparameters, scaled to a 30-second demo.
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp".into();
+    cfg.scheme = "qedps".into(); // the paper's Algorithm 2
+    cfg.iters = 400;
+    cfg.train_n = 6_000;
+    cfg.test_n = 1_000;
+    cfg.eval_every = 100;
+    cfg.log_every = 10;
+
+    let mut rt = Runtime::create()?;
+    let hist = run_experiment(&mut rt, &cfg)?;
+    let s = hist.summary();
+
+    println!("\n==== quickstart: {} + {} ====", cfg.model, cfg.scheme);
+    println!("test accuracy      : {:.2}% (best {:.2}%)",
+             100.0 * s.final_test_acc, 100.0 * s.best_test_acc);
+    println!("mean weight bits   : {:.1}   (fp32 baseline: 32)", s.mean_weight_bits);
+    println!("mean act bits      : {:.1}", s.mean_act_bits);
+    println!("mean grad bits     : {:.1}", s.mean_grad_bits);
+    println!("min weight bits    : {}", s.min_weight_bits);
+    println!("mean step time     : {:.1} ms", s.mean_step_ms);
+
+    // What those bits buy on the paper's target hardware:
+    let speedup = qedps::coordinator::figures::history_speedup(&rt, &cfg.model, &hist)?;
+    println!("flexible-MAC speedup vs 32-bit: {speedup:.2}x");
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Table-1 head-to-head: every precision-scaling scheme the paper discusses
+//! on the identical workload — this paper's qedps, Na & Mukhopadhyay's
+//! convergence-based DPS, Courbariaux's fixed-width dynamic radix, Gupta's
+//! static <8,8>, the naive fixed-13, and the fp32 baseline.
+//!
+//! ```bash
+//! cargo run --release --example scheme_comparison            # mlp, fast
+//! MODEL=lenet ITERS=3000 cargo run --release --example scheme_comparison
+//! ```
+
+use qedps::config::ExperimentConfig;
+use qedps::coordinator;
+use qedps::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    qedps::util::logging::init();
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = std::env::var("MODEL").unwrap_or_else(|_| "mlp".into());
+    cfg.iters = std::env::var("ITERS").ok().and_then(|s| s.parse().ok())
+        .unwrap_or(600);
+    cfg.train_n = 8_000;
+    cfg.test_n = 1_000;
+    cfg.eval_every = cfg.iters / 4;
+    cfg.log_every = 10;
+
+    let schemes = ["qedps", "na", "courbariaux", "gupta88", "fixed13",
+                   "schedule", "float"];
+    let mut rt = Runtime::create()?;
+    let rows = coordinator::compare_schemes(&mut rt, &cfg, &schemes)?;
+    coordinator::print_compare_table(&rows);
+
+    println!("expected shape (paper Table 1 + §6):");
+    println!("  - qedps converges at the lowest mean weight/act bits of the DPS schemes");
+    println!("  - fixed13 fails to converge (or lags badly)");
+    println!("  - float32 sets the accuracy reference at 32 bits");
+    println!("  - qedps hw_speedup > na's (lower bits on the flexible MAC)");
+    Ok(())
+}

@@ -1,0 +1,226 @@
+"""AOT build: lower every L2 graph to HLO **text** + write the manifest.
+
+This is the only place Python touches the system; it runs once at build
+time (``make artifacts``) and the Rust coordinator is self-contained
+afterwards.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+
+* ``<module>.hlo.txt``      — one per lowered graph (see ``MODULES``)
+* ``<model>_params.npz``    — deterministic initial parameters (He init)
+* ``manifest.json``         — for every module: input/output names, shapes,
+  dtypes, quantize-site list (name + class, in stat-vector order), model
+  metadata (param names/shapes, input shape, batch).  The Rust runtime is
+  entirely manifest-driven; nothing about argument order is hard-coded on
+  the Rust side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.quantize import quantize
+from .kernels.qmatmul import qmatmul
+
+TRAIN_BATCH = 64     # paper: batch size 64
+EVAL_BATCH = 100     # divides the canonical 10k test set
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (xla_extension-0.5.1-safe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _train_io(spec: M.ModelSpec, quantized: bool):
+    """(inputs, outputs) descriptors for a train-step module."""
+    ins, outs = [], []
+    for n, s in spec.params:
+        ins.append({"name": n, **_spec(s)})
+    for n, s in spec.params:
+        ins.append({"name": f"m_{n}", **_spec(s)})
+    ins.append({"name": "x", **_spec((TRAIN_BATCH,) + tuple(spec.input_shape))})
+    ins.append({"name": "y", **_spec((TRAIN_BATCH,), ), "dtype": "i32"})
+    ins.append({"name": "lr", **_spec(())})
+    ins.append({"name": "seed", **_spec(())})
+    ins.append({"name": "prec", **_spec((6,))})
+    nsites = len(M.train_step_sites(spec)) if quantized else 0
+    for n, s in spec.params:
+        outs.append({"name": n, **_spec(s)})
+    for n, s in spec.params:
+        outs.append({"name": f"m_{n}", **_spec(s)})
+    outs.append({"name": "loss", **_spec(())})
+    outs.append({"name": "acc", **_spec(())})
+    outs.append({"name": "evec", **_spec((max(nsites, 1),))})
+    outs.append({"name": "rvec", **_spec((max(nsites, 1),))})
+    return ins, outs
+
+
+def _eval_io(spec: M.ModelSpec):
+    ins = [{"name": n, **_spec(s)} for n, s in spec.params]
+    ins.append({"name": "x", **_spec((EVAL_BATCH,) + tuple(spec.input_shape))})
+    ins.append({"name": "y", **_spec((EVAL_BATCH,)), "dtype": "i32"})
+    ins.append({"name": "prec", **_spec((6,))})
+    outs = [{"name": "loss_sum", **_spec(())},
+            {"name": "correct", **_spec(())}]
+    return ins, outs
+
+
+def _quantize_module(n, stochastic):
+    """Standalone quantizer (parity tests + L1 benches from Rust)."""
+    def fn(x, il, fl, seed):
+        return quantize(x, il, fl, seed, stochastic=stochastic)
+    args = (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    ins = [{"name": "x", **_spec((n,))},
+           {"name": "il", **_spec(()), "dtype": "i32"},
+           {"name": "fl", **_spec(()), "dtype": "i32"},
+           {"name": "seed", **_spec(()), "dtype": "i32"}]
+    outs = [{"name": "q", **_spec((n,))},
+            {"name": "e", **_spec(())},
+            {"name": "r", **_spec(())}]
+    return fn, args, ins, outs
+
+
+def _qmatmul_module(m, k, n):
+    def fn(a, b, prec, seed):
+        prec = prec.astype(jnp.int32)
+        return (qmatmul(a, b, prec[0], prec[1], prec[2], prec[3], seed),)
+    args = (
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+        jax.ShapeDtypeStruct((4,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    ins = [{"name": "a", **_spec((m, k))},
+           {"name": "b", **_spec((k, n))},
+           {"name": "prec", **_spec((4,))},
+           {"name": "seed", **_spec(()), "dtype": "i32"}]
+    outs = [{"name": "c", **_spec((m, n))}]
+    return fn, args, ins, outs
+
+
+def build_modules():
+    """name -> (fn, example_args, manifest entry)."""
+    mods = {}
+    for mname, spec in M.MODELS.items():
+        for kind, quantized, stochastic in (
+            ("train", True, True),
+            ("train_nearest", True, False),
+            ("train_float", False, True),
+        ):
+            fn = M.make_train_step(spec, quantized=quantized,
+                                   stochastic=stochastic)
+            args = M.example_args(spec, TRAIN_BATCH)
+            ins, outs = _train_io(spec, quantized)
+            sites = M.train_step_sites(spec) if quantized else []
+            mods[f"{mname}_{kind}"] = (fn, args, {
+                "kind": "train", "model": mname, "batch": TRAIN_BATCH,
+                "quantized": quantized, "stochastic": stochastic,
+                "inputs": ins, "outputs": outs,
+                "sites": [{"name": n, "class": c} for n, c in sites],
+            })
+        for kind, quantized in (("eval", True), ("eval_float", False)):
+            fn = M.make_eval_step(spec, quantized=quantized)
+            args = M.example_args(spec, EVAL_BATCH, for_eval=True)
+            ins, outs = _eval_io(spec)
+            mods[f"{mname}_{kind}"] = (fn, args, {
+                "kind": "eval", "model": mname, "batch": EVAL_BATCH,
+                "quantized": quantized, "stochastic": False,
+                "inputs": ins, "outputs": outs, "sites": [],
+            })
+
+    for n in (4096, 131072):
+        for tag, st in (("sr", True), ("rn", False)):
+            fn, args, ins, outs = _quantize_module(n, st)
+            mods[f"quantize_{tag}_{n}"] = (fn, args, {
+                "kind": "quantize", "model": None, "batch": n,
+                "quantized": True, "stochastic": st,
+                "inputs": ins, "outputs": outs, "sites": [],
+            })
+
+    fn, args, ins, outs = _qmatmul_module(256, 256, 256)
+    mods["qmatmul_256"] = (fn, args, {
+        "kind": "qmatmul", "model": None, "batch": 256,
+        "quantized": True, "stochastic": True,
+        "inputs": ins, "outputs": outs, "sites": [],
+    })
+    return mods
+
+
+def model_meta():
+    return {
+        name: {
+            "params": [{"name": n, "shape": list(s)} for n, s in spec.params],
+            "input_shape": list(spec.input_shape),
+            "num_classes": M.NUM_CLASSES,
+        }
+        for name, spec in M.MODELS.items()
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module-name substrings to rebuild")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    mods = build_modules()
+    manifest = {"modules": {}, "models": model_meta(),
+                "train_batch": TRAIN_BATCH, "eval_batch": EVAL_BATCH}
+
+    for name, (fn, eargs, meta) in mods.items():
+        if args.only and not any(s in name for s in args.only.split(",")):
+            continue
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        print(f"[aot] lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*eargs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["file"] = f"{name}.hlo.txt"
+        manifest["modules"][name] = meta
+        print(f"[aot]   wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+    for mname, spec in M.MODELS.items():
+        params = M.init_params(spec, seed=0)
+        path = os.path.join(args.out_dir, f"{mname}_params.npz")
+        np.savez(path, **{n: p for (n, _), p in zip(spec.params, params)})
+        print(f"[aot] wrote {path}")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {mpath} ({len(manifest['modules'])} modules)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""L1: Pallas quantized matmul — the flexible-MAC analogue on TPU.
+
+The paper's target hardware (Na & Mukhopadhyay's flexible
+multiplier-accumulator) consumes *already-quantized* fixed-point operands
+and accumulates in a wide register.  On TPU the same insight maps to:
+quantize operand tiles on the way from HBM into VMEM (VPU elementwise work),
+then feed the MXU with the quantized tiles, accumulating in f32.  This
+kernel implements that pipeline:
+
+    C[i,j] = sum_k  Q_a(A[i,k]-tile) @ Q_w(B[k,j]-tile)     (f32 accumulate)
+
+Tiles are quantized with the same counter-hash stochastic rounding as
+``quantize.py``, indexed by each element's *global* flat position so a tile
+quantizes identically regardless of which grid step touches it.
+
+Grid iteration order is (i, j, k) with k innermost; the output tile is
+zeroed at k == 0 and accumulated across k — the standard Pallas matmul
+schedule, expressing with ``BlockSpec`` what a CUDA kernel would express
+with threadblock tiling.  ``interpret=True`` for CPU-PJRT executability.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quantize import uniform01, _quantize_block
+
+# Seed offset decorrelating the weight stream from the activation stream.
+WSEED_OFFSET = 0x1234567
+
+BM, BK, BN = 64, 64, 64
+
+
+def _flat_idx(row0, col0, rows, cols, row_stride):
+    """Global flat indices (u32) of a (rows, cols) tile at (row0, col0)."""
+    r = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 0) + row0
+    c = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1) + col0
+    return (r * row_stride + c).astype(jnp.uint32)
+
+
+def _kernel(params_ref, a_ref, b_ref, o_ref, *, k_dim, n_dim, stochastic):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    seed, il_a, fl_a, il_w, fl_w = (params_ref[t] for t in range(5))
+
+    a = a_ref[...]
+    b = b_ref[...]
+
+    ia = _flat_idx(i * BM, k * BK, BM, BK, k_dim)
+    iw = _flat_idx(k * BK, j * BN, BK, BN, n_dim)
+    if stochastic:
+        ua = uniform01(ia, seed)
+        uw = uniform01(iw, seed + WSEED_OFFSET)
+    else:
+        ua = jnp.full((BM, BK), 0.5, jnp.float32)
+        uw = jnp.full((BK, BN), 0.5, jnp.float32)
+
+    qa, _, _, _ = _quantize_block(a, ua, il_a, fl_a, nearest=not stochastic)
+    qb, _, _, _ = _quantize_block(b, uw, il_w, fl_w, nearest=not stochastic)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(qa, qb, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("stochastic",))
+def qmatmul(a, b, il_a, fl_a, il_w, fl_w, seed, *, stochastic=True):
+    """C = Q_a(a) @ Q_w(b) with f32 accumulation.
+
+    Shapes must tile evenly by (64, 64, 64); the model layer sizes are
+    chosen to satisfy this (the general train step quantizes via
+    ``quantize.quantize`` + XLA dot instead).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % BM == 0 and k % BK == 0 and n % BN == 0, (a.shape, b.shape)
+    params = jnp.stack(
+        [jnp.asarray(v, jnp.int32) for v in (seed, il_a, fl_a, il_w, fl_w)]
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, k_dim=k, n_dim=n, stochastic=stochastic
+        ),
+        grid=(m // BM, n // BN, k // BK),
+        in_specs=[
+            pl.BlockSpec((5,), lambda i, j, k: (0,)),
+            pl.BlockSpec((BM, BK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(params, a.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,203 @@
+"""L1: Pallas stochastic fixed-point quantization kernel.
+
+The paper emulates a dynamic fixed-point format ``<IL, FL>`` (integer length,
+fractional length; IL includes the sign bit) by rounding float tensors.  This
+kernel is the compute hot-spot of that emulation: elementwise
+
+    q = clip( floor(x * 2^FL + u) * 2^-FL ,  -2^(IL-1),  2^(IL-1) - 2^-FL )
+
+with ``u ~ U[0,1)`` (paper Eq. 2, stochastic rounding) or ``u = 0.5``
+(paper Eq. 1, round-to-nearest), plus the two feedback statistics the
+dynamic-precision-scaling controller consumes:
+
+    R = mean( x outside representable range )      -> drives IL
+    E = sum|q - x| / (sum|x| + 1e-8)               -> drives FL
+
+Design notes
+------------
+* ``IL``/``FL``/``seed`` are **runtime inputs** (traced scalars), so the AOT
+  artifact can be driven at a new precision every iteration without
+  recompilation.
+* Randomness is a counter-based integer hash (murmur3-style avalanche over
+  ``flat_index * GOLDEN + seed``), not threefry: stateless, lowers to plain
+  HLO integer ops, and is mirrored bit-exactly by
+  ``rust/src/fixedpoint/quantize.rs`` so the Rust coordinator can verify the
+  HLO artifact element-for-element.
+* ``2^e`` is built by writing the exponent field of an f32 directly
+  (``(e+127) << 23`` bitcast), never ``exp(e*ln2)``: exact for all integer
+  ``e`` in range, and trivially mirrored in Rust.
+* The kernel runs under ``interpret=True`` — the CPU PJRT plugin cannot
+  execute Mosaic custom-calls.  Block structure is still TPU-shaped: a flat
+  block of ``BLOCK`` elements is one ``(BLOCK/128, 128)`` VMEM tile
+  (512 KiB at the default), with per-block partial stat sums so the stats
+  reduction is two tiny reductions instead of a full-size second pass.
+
+Float-emulation caveat (shared with the paper's Caffe emulation): once
+``IL + FL`` exceeds the 24-bit f32 mantissa, the grid arithmetic and the
+upper clip bound are themselves rounded.  The dynamics this paper reports
+live at <= 20 total bits, where the emulation is exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Flat elements per grid step.  128 lanes x 512 sublanes = 256 KiB of f32 in,
+# 256 KiB out: comfortably double-bufferable in 16 MiB of VMEM.
+BLOCK = 65536
+
+GOLDEN = 0x9E3779B9
+MIX1 = 0x85EBCA6B
+MIX2 = 0xC2B2AE35
+EPS = 1e-8
+
+# Hard bounds on IL/FL accepted by the kernel (controller clamps harder).
+IL_MIN, IL_MAX = 1, 30
+FL_MIN, FL_MAX = 0, 30
+
+
+def exp2i(e):
+    """Exact 2**e for integer-valued i32 ``e`` in [-126, 127].
+
+    Builds the f32 exponent field directly; bit-exact and branch-free, and
+    mirrored by ``fixedpoint::exp2i`` on the Rust side.
+    """
+    e = e.astype(jnp.int32) if hasattr(e, "astype") else jnp.int32(e)
+    bits = (e + jnp.int32(127)) << jnp.int32(23)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def hash_u32(idx, seed):
+    """Counter-based avalanche hash: u32 x u32 -> u32 (murmur3 finalizer)."""
+    x = idx.astype(jnp.uint32) * jnp.uint32(GOLDEN) + seed.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(MIX1)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(MIX2)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def uniform01(idx, seed):
+    """U[0,1) with a 24-bit mantissa: every value exactly representable."""
+    h = hash_u32(idx, seed) >> jnp.uint32(8)
+    return h.astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _quantize_block(x, u, il, fl, *, nearest=False):
+    """Shared elementwise math: returns (q, err, ovf) for one block.
+
+    Rounding is the residual-comparison form, not ``floor(x*s + u)``: the
+    naive add can spill to the next integer in f32 when ``x*s`` is large and
+    ``u`` is close to 1, breaking idempotence/unbiasedness.  The residual
+    ``r = x*s - floor(x*s)`` is *exact* in f32 (Sterbenz), so
+
+        stochastic: round up  iff  r > u      (P = r, exactly Eq. 2)
+        nearest:    round up  iff  r >= 0.5   (half-up, Eq. 1)
+    """
+    s = exp2i(fl)
+    inv_s = exp2i(-fl)
+    hi = exp2i(il - 1) - inv_s   # largest representable value
+    lo = -exp2i(il - 1)          # most negative representable value
+    xs = x * s
+    f = jnp.floor(xs)
+    r = xs - f                   # exact: f/2 <= xs <= 2f (or f == 0)
+    up = (r >= u) if nearest else (r > u)
+    y = (f + up.astype(jnp.float32)) * inv_s
+    q = jnp.clip(y, lo, hi)
+    ovf = jnp.logical_or(x < lo, x > hi).astype(jnp.float32)
+    # E is a ratio of means: sum|q-x| / sum|x| (computed by the wrapper).
+    # Per-element |q-x|/|x| would be dominated by near-zero entries (a
+    # rounded-to-zero 1e-6 weight scores relative error ~1), which starves
+    # the controller of signal; the ratio-of-means reading of the paper's
+    # "average quantization error percentage" is scale-free and stable.
+    err = jnp.abs(q - x)
+    mag = jnp.abs(x)
+    return q, err, ovf, mag
+
+
+def _kernel(params_ref, x_ref, q_ref, esum_ref, rsum_ref, xsum_ref, *,
+            stochastic):
+    """One grid step: quantize BLOCK elements, emit partial stat sums.
+
+    params_ref: i32[3] = [seed, il, fl] (runtime scalars, replicated per
+    block).  esum/rsum/xsum are (1,) per-block partials; the wrapper
+    reduces them.
+    """
+    i = pl.program_id(0)
+    seed = params_ref[0]
+    il = params_ref[1]
+    fl = params_ref[2]
+    x = x_ref[...]
+    idx = (i * BLOCK + jax.lax.iota(jnp.int32, BLOCK)).astype(jnp.uint32)
+    if stochastic:
+        u = uniform01(idx, seed)
+    else:
+        u = jnp.full((BLOCK,), 0.5, jnp.float32)
+    q, err, ovf, mag = _quantize_block(x, u, il, fl, nearest=not stochastic)
+    q_ref[...] = q
+    esum_ref[0] = jnp.sum(err)
+    rsum_ref[0] = jnp.sum(ovf)
+    xsum_ref[0] = jnp.sum(mag)
+
+
+@functools.partial(jax.jit, static_argnames=("stochastic",))
+def quantize(x, il, fl, seed, *, stochastic=True):
+    """Quantize ``x`` to fixed point ``<il, fl>``; returns ``(q, e, r)``.
+
+    Args:
+      x: any-shape f32 tensor.
+      il, fl: i32 scalars (traced — may change every call without recompile).
+      seed: i32/u32 scalar; vary per call for fresh stochastic-rounding noise.
+      stochastic: Eq. 2 (True) vs Eq. 1 round-to-nearest (False). Static.
+
+    Returns:
+      q: quantized tensor, same shape/dtype as ``x``.
+      e: scalar mean relative quantization error (the paper's ``E``).
+      r: scalar overflow rate (the paper's ``R``).
+    """
+    x = x.astype(jnp.float32)
+    il = jnp.clip(jnp.asarray(il, jnp.int32), IL_MIN, IL_MAX)
+    fl = jnp.clip(jnp.asarray(fl, jnp.int32), FL_MIN, FL_MAX)
+    seed = jnp.asarray(seed, jnp.int32)
+
+    shape = x.shape
+    n = x.size
+    flat = x.reshape(-1)
+    nb = max(1, -(-n // BLOCK))
+    pad = nb * BLOCK - n
+    if pad:
+        # Zero padding is stat-neutral: q(0)=0, err(0)=0, ovf(0)=0.
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    tiles = flat.reshape(nb, BLOCK)
+    params = jnp.stack([seed, il, fl]).astype(jnp.int32)
+
+    q, esum, rsum, xsum = pl.pallas_call(
+        functools.partial(_kernel, stochastic=stochastic),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=True,
+    )(params, tiles)
+
+    q = q.reshape(-1)[:n].reshape(shape)
+    e = jnp.sum(esum) / (jnp.sum(xsum) + jnp.float32(EPS))
+    return q, e, jnp.sum(rsum) * jnp.float32(1.0 / n)

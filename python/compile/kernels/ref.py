@@ -1,0 +1,77 @@
+"""Pure-jnp correctness oracle for the L1 kernels.
+
+Deliberately re-implements the quantizer spec *independently* of
+``quantize.py`` (no shared helpers): the tests assert the Pallas kernel and
+this oracle agree bit-for-bit, so any transcription slip in either shows up.
+
+Spec (DESIGN.md §4):
+  format <IL, FL>, step eps = 2^-FL, range [-2^(IL-1), 2^(IL-1) - eps]
+  stochastic:  q = clip(floor(x * 2^FL + u) * 2^-FL)   u = hash-uniform[0,1)
+  nearest:     u = 0.5
+  R = mean(x outside range),  E = sum|q - x| / (sum|x| + 1e-8)
+  hash = murmur3 finalizer over (flat_index * 0x9E3779B9 + seed), top 24
+  bits -> uniform.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pow2(e):
+    """2**e for integer e, via the f32 exponent field (exact)."""
+    bits = (jnp.asarray(e, jnp.int32) + 127) << 23
+    return jax.lax.bitcast_convert_type(bits.astype(jnp.int32), jnp.float32)
+
+
+def _uniform(n, seed):
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    x = idx * jnp.uint32(0x9E3779B9) + jnp.asarray(seed, jnp.int32).astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return (x >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def quantize_ref(x, il, fl, seed, *, stochastic=True):
+    """Oracle quantizer. Same contract as ``quantize.quantize``."""
+    x = jnp.asarray(x, jnp.float32)
+    il = jnp.clip(jnp.asarray(il, jnp.int32), 1, 30)
+    fl = jnp.clip(jnp.asarray(fl, jnp.int32), 0, 30)
+    shape, n = x.shape, x.size
+    flat = x.reshape(-1)
+
+    if stochastic:
+        u = _uniform(n, seed)
+    else:
+        u = jnp.full((n,), 0.5, jnp.float32)
+
+    s = _pow2(fl)
+    inv_s = _pow2(-fl)
+    hi = _pow2(il - 1) - inv_s
+    lo = -_pow2(il - 1)
+    xs = flat * s
+    fl_part = jnp.floor(xs)
+    r = xs - fl_part
+    up = (r >= u) if not stochastic else (r > u)
+    q = jnp.clip((fl_part + up.astype(jnp.float32)) * inv_s, lo, hi)
+    ovf = jnp.logical_or(flat < lo, flat > hi)
+    # E = ratio of means: sum|q-x| / (sum|x| + eps) — see quantize.py.
+    e = jnp.sum(jnp.abs(q - flat)) / (jnp.sum(jnp.abs(flat)) + jnp.float32(1e-8))
+    return q.reshape(shape), e, jnp.mean(ovf.astype(jnp.float32))
+
+
+def qmatmul_ref(a, b, il_a, fl_a, il_w, fl_w, seed, *, stochastic=True):
+    """Oracle for the quantized matmul kernel: Q(a) @ Q(b), f32 accumulate.
+
+    The two operands draw noise from decorrelated seed streams (seed and
+    seed + 0x1234567, matching the kernel).
+    """
+    qa, _, _ = quantize_ref(a, il_a, fl_a, seed, stochastic=stochastic)
+    qb, _, _ = quantize_ref(
+        b, il_w, fl_w, jnp.asarray(seed, jnp.int32) + 0x1234567, stochastic=stochastic
+    )
+    return jnp.dot(qa, qb, preferred_element_type=jnp.float32)

@@ -1,0 +1,379 @@
+"""L2: the paper's training workloads as quantized JAX graphs.
+
+Two networks:
+
+* ``mlp``   — 784-256-10 fully connected (fast path for tests/quickstart).
+* ``lenet`` — the paper's evaluation network (Caffe LeNet): conv5x5x20 /
+  maxpool2 / conv5x5x50 / maxpool2 / fc500 / fc10 on 28x28x1 inputs.
+
+For each network we build, and ``aot.py`` lowers:
+
+* a **quantized train step** — forward with activation-site rounding,
+  backward with gradient rounding (via ``quant.QuantCtx``), Caffe-style
+  momentum-SGD update with weight decay, stored-weight rounding, and the
+  per-site (E, R) stat vectors the Rust DPS controller consumes;
+* a **float32 baseline train step** — identical update rule, no rounding;
+* a **quantized eval step** — deterministic round-to-nearest inference
+  (stochastic noise is a training-time tool), returning summed loss and
+  correct-prediction count so L3 can aggregate over the test set;
+* a **float eval step**.
+
+All steps take *flat* argument lists (params..., mom..., x, y, lr, seed,
+prec) so the AOT artifact's parameter order is explicit and recorded in
+``manifest.json``.  ``prec`` is ``f32[6] = [ILw, FLw, ILa, FLa, ILg, FLg]``
+— a **runtime input**, which is the heart of the design: the Rust
+controller re-decides precision every iteration without recompiling.
+
+Update rule (Caffe SGD, the paper's settings):
+    v    <- mu * v + lr * (dW + wd * W)
+    W    <- Q_w( W - v )
+The momentum buffer stays f32: it models the wide accumulator register of
+the paper's flexible MAC unit (Na & Mukhopadhyay accumulate wide and round
+on writeback).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import QuantCtx
+
+MU = 0.9          # momentum (paper)
+WD = 0.0005       # weight decay (paper)
+NUM_CLASSES = 10
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs + init
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ModelSpec:
+    name: str
+    input_shape: tuple          # per-example, e.g. (784,) or (28, 28, 1)
+    params: list = field(default_factory=list)   # [(name, shape)]
+    forward: callable = None    # forward(params_list, x, ctx) -> logits
+
+    @property
+    def param_names(self):
+        return [n for n, _ in self.params]
+
+    @property
+    def param_shapes(self):
+        return [s for _, s in self.params]
+
+
+def _he(rng, shape):
+    fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+    scale = np.sqrt(2.0 / fan_in)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def _is_bias(name):
+    return name.startswith("b") or (len(name) > 1 and name[1] == "b")
+
+
+def init_params(spec: ModelSpec, seed: int = 0):
+    """Deterministic float32 init: He for weights, zeros for biases, ones
+    for layernorm gains (``g*``), small-normal positional embeddings."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in spec.params:
+        if name.startswith("g"):
+            out.append(np.ones(shape, np.float32))
+        elif name == "pos":
+            out.append((rng.standard_normal(shape) * 0.02).astype(np.float32))
+        elif _is_bias(name):
+            out.append(np.zeros(shape, np.float32))
+        else:
+            out.append(_he(rng, shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Networks
+# ---------------------------------------------------------------------------
+
+def _mlp_forward(params, x, ctx: QuantCtx):
+    w1, b1, w2, b2 = params
+    x = ctx.act(x, "input")
+    a1 = ctx.act(jax.nn.relu(x @ w1 + b1), "fc1")
+    logits = ctx.act(a1 @ w2 + b2, "logits")
+    return logits
+
+
+MLP = ModelSpec(
+    name="mlp",
+    input_shape=(784,),
+    params=[("w1", (784, 256)), ("b1", (256,)),
+            ("w2", (256, 10)), ("b2", (10,))],
+    forward=_mlp_forward,
+)
+
+
+def _conv(x, w, b):
+    """VALID NHWC conv + bias (HWIO filters), f32 accumulate."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32,
+    )
+    return y + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _lenet_forward(params, x, ctx: QuantCtx):
+    """Caffe LeNet. Max-pooling of on-grid values stays on-grid, so pool
+    outputs need no extra rounding site (DESIGN.md §4)."""
+    cw1, cb1, cw2, cb2, fw1, fb1, fw2, fb2 = params
+    x = ctx.act(x, "input")
+    a1 = _maxpool2(ctx.act(jax.nn.relu(_conv(x, cw1, cb1)), "conv1"))
+    a2 = _maxpool2(ctx.act(jax.nn.relu(_conv(a1, cw2, cb2)), "conv2"))
+    flat = a2.reshape(a2.shape[0], -1)
+    a3 = ctx.act(jax.nn.relu(flat @ fw1 + fb1), "fc1")
+    logits = ctx.act(a3 @ fw2 + fb2, "logits")
+    return logits
+
+
+LENET = ModelSpec(
+    name="lenet",
+    input_shape=(28, 28, 1),
+    params=[("cw1", (5, 5, 1, 20)), ("cb1", (20,)),
+            ("cw2", (5, 5, 20, 50)), ("cb2", (50,)),
+            ("fw1", (800, 500)), ("fb1", (500,)),
+            ("fw2", (500, 10)), ("fb2", (10,))],
+    forward=_lenet_forward,
+)
+
+# ---------------------------------------------------------------------------
+# Transformer extension (beyond the paper): shows DPS generalizes past
+# convnets.  A 28x28 digit is read as a 28-step sequence of 28-dim row
+# vectors (the classic sequential-MNIST setup), so the whole data pipeline
+# is reused.  Two pre-LN single-head attention blocks, mean-pool, linear
+# head.  LayerNorm stays in float (it models the wide normalization unit;
+# its in/outputs pass through activation quantize sites like everything
+# else).
+# ---------------------------------------------------------------------------
+
+T_DIM = 64
+T_HID = 128
+T_SEQ = 28
+
+
+def _ln(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return g * (x - mu) * jax.lax.rsqrt(var + 1e-5) + b
+
+
+def _attn(x, wq, wk, wv, wo):
+    q = x @ wq
+    k = x @ wk
+    v = x @ wv
+    a = jax.nn.softmax(
+        (q @ jnp.swapaxes(k, -1, -2)) * jnp.float32(1.0 / np.sqrt(T_DIM)),
+        axis=-1,
+    )
+    return (a @ v) @ wo
+
+
+def _transformer_forward(params, x, ctx: QuantCtx):
+    it = iter(params)
+
+    def take(n):
+        return [next(it) for _ in range(n)]
+
+    (w_in, b_in, pos) = take(3)
+    blocks = [take(12) for _ in range(2)]
+    (w_out, b_out) = take(2)
+
+    x = x.reshape(x.shape[0], T_SEQ, T_SEQ)  # (B, 28, 28) row sequence
+    h = ctx.act(x @ w_in + b_in + pos, "embed")
+    for i, blk in enumerate(blocks):
+        (wq, wk, wv, wo, g1, bb1, w1, bb2, w2, bb3, g2, bb4) = blk
+        a = _attn(_ln(h, g1, bb1), wq, wk, wv, wo)
+        h = ctx.act(h + a, f"attn{i}")
+        m = jax.nn.relu(_ln(h, g2, bb4) @ w1 + bb2) @ w2 + bb3
+        h = ctx.act(h + m, f"mlp{i}")
+    pooled = ctx.act(jnp.mean(h, axis=1), "pool")
+    logits = ctx.act(pooled @ w_out + b_out, "logits")
+    return logits
+
+
+def _tf_params():
+    d, hid, seq = T_DIM, T_HID, T_SEQ
+    params = [("w_in", (seq, d)), ("b_in", (d,)), ("pos", (seq, d))]
+    for i in range(2):
+        params += [
+            (f"wq{i}", (d, d)), (f"wk{i}", (d, d)), (f"wv{i}", (d, d)),
+            (f"wo{i}", (d, d)),
+            (f"g1_{i}", (d,)), (f"bb1_{i}", (d,)),
+            (f"w1_{i}", (d, hid)), (f"bb2_{i}", (hid,)),
+            (f"w2_{i}", (hid, d)), (f"bb3_{i}", (d,)),
+            (f"g2_{i}", (d,)), (f"bb4_{i}", (d,)),
+        ]
+    params += [("w_out", (d, 10)), ("b_out", (10,))]
+    return params
+
+
+TRANSFORMER = ModelSpec(
+    name="transformer",
+    input_shape=(28, 28, 1),
+    params=_tf_params(),
+    forward=_transformer_forward,
+)
+
+MODELS = {"mlp": MLP, "lenet": LENET, "transformer": TRANSFORMER}
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics
+# ---------------------------------------------------------------------------
+
+def _xent(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def _correct(logits, y):
+    return jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(spec: ModelSpec, quantized: bool, stochastic: bool = True):
+    """Returns ``fn`` taking flat args:
+
+        params[P], mom[P], x, y, lr, seed, prec
+
+    and returning
+
+        new_params[P], new_mom[P], loss, acc, evec, rvec.
+
+    Float mode emits evec = rvec = f32[1] zeros (manifest: nsites = 0).
+    """
+    P = len(spec.params)
+
+    def fn(*flat):
+        params = list(flat[:P])
+        mom = list(flat[P:2 * P])
+        x, y, lr, seed, prec = flat[2 * P:]
+        y = y.astype(jnp.int32)
+
+        n_act = len(train_step_sites(spec)) - 2 * P if quantized else 0
+
+        def loss_fn(ps):
+            # Fwd sites live inside the autodiff trace; only *arrays* may
+            # ride out through aux (a ctx object would leak tracers).
+            ctx = QuantCtx(prec, seed, stochastic=stochastic, enabled=quantized)
+            logits = spec.forward(ps, x, ctx)
+            loss = _xent(logits, y)
+            return loss, (tuple(ctx.es), tuple(ctx.rs), logits)
+
+        (loss, (act_es, act_rs, logits)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+        acc = _correct(logits, y) / jnp.float32(x.shape[0])
+        if not quantized:
+            # Anchor otherwise-unused inputs: the StableHLO->XlaComputation
+            # conversion prunes unused entry parameters, which would change
+            # the artifact's signature vs the manifest.  The zero-weight use
+            # keeps `seed`/`prec` in the parameter list at no numeric cost.
+            loss = loss + 0.0 * (seed + jnp.sum(prec))
+
+        # Update-time sites continue the site numbering after the act sites
+        # so per-site noise streams stay disjoint.
+        uctx = QuantCtx(prec, seed, stochastic=stochastic, enabled=quantized,
+                        start=n_act)
+        new_params, new_mom = [], []
+        for name, w, v, g in zip(spec.param_names, params, mom, grads):
+            if quantized:
+                g = uctx.grad(g, f"g_{name}")
+            v_new = MU * v + lr * (g + WD * w)
+            w_new = w - v_new
+            if quantized:
+                w_new = uctx.weight(w_new, f"w_{name}")
+            new_params.append(w_new)
+            new_mom.append(v_new)
+
+        if quantized:
+            evec = jnp.stack(list(act_es) + uctx.es)
+            rvec = jnp.stack(list(act_rs) + uctx.rs)
+        else:
+            evec = rvec = jnp.zeros((1,), jnp.float32)
+        return tuple(new_params) + tuple(new_mom) + (loss, acc, evec, rvec)
+
+    return fn
+
+
+def train_step_sites(spec: ModelSpec, quantized: bool = True):
+    """Site (name, class) list, in the exact order the step records stats.
+
+    Order: activation sites in forward call order, then per parameter (in
+    spec order) its gradient site then its weight site — the order ``fn``
+    appends them.
+    """
+    if not quantized:
+        return []
+    acts = {"mlp": ["input", "fc1", "logits"],
+            "lenet": ["input", "conv1", "conv2", "fc1", "logits"],
+            "transformer": ["embed", "attn0", "mlp0", "attn1", "mlp1",
+                            "pool", "logits"]}[spec.name]
+    sites = [(a, "act") for a in acts]
+    for name in spec.param_names:
+        sites.append((f"g_{name}", "grad"))
+        sites.append((f"w_{name}", "weight"))
+    return sites
+
+
+def make_eval_step(spec: ModelSpec, quantized: bool):
+    """Eval over one batch: (params[P], x, y, prec) -> (loss_sum, correct).
+
+    Round-to-nearest (deterministic) activation quantization; stored weights
+    are already on-grid from the train step's weight site.
+    """
+    P = len(spec.params)
+
+    def fn(*flat):
+        params = list(flat[:P])
+        x, y, prec = flat[P:]
+        y = y.astype(jnp.int32)
+        ctx = QuantCtx(prec, jnp.float32(0.0), stochastic=False,
+                       enabled=quantized)
+        logits = spec.forward(params, x, ctx)
+        loss_sum = _xent(logits, y) * jnp.float32(x.shape[0])
+        if not quantized:
+            # keep `prec` in the entry signature (see make_train_step)
+            loss_sum = loss_sum + 0.0 * jnp.sum(prec)
+        return loss_sum, _correct(logits, y)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Example args for lowering (shapes only)
+# ---------------------------------------------------------------------------
+
+def example_args(spec: ModelSpec, batch: int, for_eval: bool = False):
+    f32 = jnp.float32
+    params = [jax.ShapeDtypeStruct(s, f32) for s in spec.param_shapes]
+    x = jax.ShapeDtypeStruct((batch,) + tuple(spec.input_shape), f32)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    prec = jax.ShapeDtypeStruct((6,), f32)
+    if for_eval:
+        return (*params, x, y, prec)
+    mom = [jax.ShapeDtypeStruct(s, f32) for s in spec.param_shapes]
+    lr = jax.ShapeDtypeStruct((), f32)
+    seed = jax.ShapeDtypeStruct((), f32)
+    return (*params, *mom, x, y, lr, seed, prec)

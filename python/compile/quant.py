@@ -1,0 +1,155 @@
+"""L2 quantization plumbing: STE autodiff wrappers + per-site stat collection.
+
+The paper's Caffe "round layers" quantize tensors on the forward pass and
+quantize the gradients flowing through them on the backward pass.  In JAX
+that is a ``custom_vjp``:
+
+  forward:   y = Q_<ILa,FLa>(x)          (+ records E, R for the site)
+  backward:  dx = Q_<ILg,FLg>(dy)        (straight-through + grad rounding)
+
+Rounding is piecewise-constant so the true derivative is zero a.e.; the
+straight-through estimator passes the cotangent through the rounding and
+then rounds *it* — exactly what fixed-point backward arithmetic does.
+
+``QuantCtx`` assigns every quantization site a stable index (the manifest
+records the names), derives a decorrelated per-site seed, and accumulates
+the ``(E, R)`` pairs the L3 precision controller consumes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.quantize import quantize
+
+# Per-site seed stride (prime): site k hashes from ``seed + k * SITE_STRIDE``.
+# Kept small enough that seed + n_sites*stride stays exactly representable in
+# f32 (seeds ride through custom_vjp as f32 scalars); the avalanche hash
+# decorrelates any seed delta, so the stride only needs to be nonzero.
+SITE_STRIDE = 4099
+# Offset separating backward-pass noise from forward-pass noise at a site.
+BWD_OFFSET = 0x5EED5
+
+
+def _i32(v):
+    return jnp.asarray(v).astype(jnp.int32)
+
+
+def _quantize_st(x, il, fl, seed, stochastic):
+    if stochastic:
+        return quantize(x, _i32(il), _i32(fl), _i32(seed), stochastic=True)
+    return quantize(x, _i32(il), _i32(fl), _i32(seed), stochastic=False)
+
+
+def make_qfun(stochastic: bool):
+    """Build the STE quantizer for one rounding mode (mode must be static).
+
+    Returns ``qfun(x, il_a, fl_a, il_g, fl_g, seed) -> (q, e, r)`` where all
+    scalar args are f32 (simplifies custom_vjp cotangents) and e/r are the
+    site's forward-pass stats.
+    """
+
+    @jax.custom_vjp
+    def qfun(x, il_a, fl_a, il_g, fl_g, seed):
+        return _quantize_st(x, il_a, fl_a, seed, stochastic)
+
+    def fwd(x, il_a, fl_a, il_g, fl_g, seed):
+        out = _quantize_st(x, il_a, fl_a, seed, stochastic)
+        return out, (il_g, fl_g, seed)
+
+    def bwd(res, ct):
+        il_g, fl_g, seed = res
+        ct_q, _, _ = ct
+        gq, _, _ = _quantize_st(
+            ct_q, il_g, fl_g, jnp.asarray(seed) + BWD_OFFSET, stochastic
+        )
+        zero = jnp.zeros((), jnp.float32)
+        return (gq, zero, zero, zero, zero, zero)
+
+    qfun.defvjp(fwd, bwd)
+    return qfun
+
+
+_QFUN = {True: make_qfun(True), False: make_qfun(False)}
+
+
+class QuantCtx:
+    """Collects per-site (E, R) stats during tracing of one train/eval step.
+
+    Sites are appended in call order; ``aot.py`` records the resulting
+    (name, class) list in the manifest so the Rust controller knows which
+    slot of the stat vectors is which.
+    """
+
+    def __init__(self, prec, seed, stochastic=True, enabled=True, start=0):
+        # prec: f32[6] = [il_w, fl_w, il_a, fl_a, il_g, fl_g]
+        # start: global index of this context's first site — a step that uses
+        # two contexts (fwd sites inside the autodiff trace, update sites
+        # outside) keeps per-site seeds disjoint by continuing the count.
+        self.prec = prec
+        self.seed = jnp.asarray(seed, jnp.float32)
+        self.stochastic = stochastic
+        self.enabled = enabled
+        self.start = start
+        self.names: list[str] = []
+        self.classes: list[str] = []
+        self.es: list = []
+        self.rs: list = []
+
+    # -- internals ---------------------------------------------------------
+    def _record(self, name, cls, e, r):
+        self.names.append(name)
+        self.classes.append(cls)
+        self.es.append(e)
+        self.rs.append(r)
+
+    # -- public sites ------------------------------------------------------
+    def act(self, x, name):
+        """Activation site: fwd quantize <ILa,FLa>, bwd quantize <ILg,FLg>."""
+        if not self.enabled:
+            return x
+        k = self.start + len(self.names)
+        seed = self.seed + jnp.float32(k * SITE_STRIDE)
+        q, e, r = _QFUN[self.stochastic](
+            x, self.prec[2], self.prec[3], self.prec[4], self.prec[5], seed
+        )
+        self._record(name, "act", e, r)
+        return q
+
+    def grad(self, g, name):
+        """Parameter-gradient site: quantize <ILg,FLg> (no autodiff needed)."""
+        if not self.enabled:
+            return g
+        k = self.start + len(self.names)
+        seed = self.seed + jnp.float32(k * SITE_STRIDE)
+        q, e, r = _quantize_st(
+            jax.lax.stop_gradient(g), self.prec[4], self.prec[5], seed,
+            self.stochastic,
+        )
+        self._record(name, "grad", e, r)
+        return q
+
+    def weight(self, w, name):
+        """Stored-weight site: quantize <ILw,FLw> after the SGD update."""
+        if not self.enabled:
+            return w
+        k = self.start + len(self.names)
+        seed = self.seed + jnp.float32(k * SITE_STRIDE)
+        q, e, r = _quantize_st(
+            jax.lax.stop_gradient(w), self.prec[0], self.prec[1], seed,
+            self.stochastic,
+        )
+        self._record(name, "weight", e, r)
+        return q
+
+    # -- outputs -----------------------------------------------------------
+    def stats(self):
+        """(evec, rvec) stacked in site order; (len-0-safe for float mode)."""
+        if not self.es:
+            z = jnp.zeros((1,), jnp.float32)
+            return z, z
+        return jnp.stack(self.es), jnp.stack(self.rs)
+
+    def site_list(self):
+        return list(zip(self.names, self.classes))

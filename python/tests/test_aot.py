@@ -1,0 +1,110 @@
+"""AOT layer tests: module specs are consistent, HLO text is emitted in the
+xla_extension-0.5.1-safe dialect, and the manifest matches the lowered
+signatures.  (Execution of the artifacts is covered by the Rust integration
+tests; this guards the build path itself.)"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def modules():
+    return aot.build_modules()
+
+
+def test_all_expected_modules_present(modules):
+    names = set(modules)
+    for mname in ("mlp", "lenet"):
+        for kind in ("train", "train_nearest", "train_float", "eval",
+                     "eval_float"):
+            assert f"{mname}_{kind}" in names
+    assert "qmatmul_256" in names
+    for n in (4096, 131072):
+        assert f"quantize_sr_{n}" in names
+    assert f"quantize_rn_4096" in names
+
+
+def test_manifest_io_matches_example_args(modules):
+    for name, (fn, eargs, meta) in modules.items():
+        assert len(meta["inputs"]) == len(eargs), name
+        for spec, arg in zip(meta["inputs"], eargs):
+            assert tuple(spec["shape"]) == tuple(arg.shape), (name, spec)
+
+
+def test_train_module_site_count(modules):
+    for mname, spec in M.MODELS.items():
+        meta = modules[f"{mname}_train"][2]
+        nsites = len(meta["sites"])
+        assert nsites == len(M.train_step_sites(spec))
+        evec = [o for o in meta["outputs"] if o["name"] == "evec"][0]
+        assert evec["shape"] == [nsites]
+        classes = {s["class"] for s in meta["sites"]}
+        assert classes == {"act", "grad", "weight"}
+
+
+def test_float_modules_have_no_sites(modules):
+    for mname in M.MODELS:
+        assert modules[f"{mname}_train_float"][2]["sites"] == []
+
+
+def test_lowering_emits_parseable_hlo_text(modules):
+    # Small module end-to-end: lower + convert; HLO text must carry an
+    # ENTRY computation and the right parameter count.
+    fn, eargs, meta = modules["quantize_sr_4096"]
+    lowered = jax.jit(fn).lower(*eargs)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    assert text.count("parameter(") >= len(meta["inputs"])
+
+
+def test_train_signature_outputs(modules):
+    fn, eargs, meta = modules["mlp_train"][0:3]
+    out = jax.eval_shape(fn, *eargs)
+    assert len(out) == len(meta["outputs"])
+    for o_spec, o in zip(meta["outputs"], out):
+        assert tuple(o_spec["shape"]) == tuple(o.shape), o_spec
+
+
+def test_float_train_keeps_seed_and_prec_alive(modules):
+    """StableHLO->XlaComputation prunes unused entry params; the float
+    graph must anchor seed/prec so the artifact signature matches the
+    manifest (regression for the 13-vs-11-buffers bug)."""
+    fn, eargs, meta = modules["mlp_train_float"][0:3]
+    lowered = jax.jit(fn).lower(*eargs)
+    text = aot.to_hlo_text(lowered)
+    entry = text[text.index("ENTRY"):]
+    entry = entry[:entry.index("\n}")]
+    n_params = entry.count("parameter(")
+    assert n_params == len(meta["inputs"]), (
+        f"entry has {n_params} params, manifest says {len(meta['inputs'])} "
+        "(unused entry params were pruned)"
+    )
+
+
+def test_params_npz_matches_manifest(tmp_path):
+    for mname, spec in M.MODELS.items():
+        params = M.init_params(spec, seed=0)
+        path = tmp_path / f"{mname}.npz"
+        np.savez(path, **{n: p for (n, _), p in zip(spec.params, params)})
+        loaded = np.load(path)
+        for (n, shape), p in zip(spec.params, params):
+            assert loaded[n].shape == tuple(shape)
+            np.testing.assert_array_equal(loaded[n], p)
+
+
+def test_model_meta_shapes():
+    meta = aot.model_meta()
+    assert meta["lenet"]["input_shape"] == [28, 28, 1]
+    assert meta["mlp"]["input_shape"] == [784]
+    lenet_total = sum(
+        int(np.prod(p["shape"])) for p in meta["lenet"]["params"]
+    )
+    assert lenet_total == 431_080  # the classic LeNet parameter count

@@ -1,0 +1,186 @@
+"""Pallas quantize kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+The kernel and the oracle are *independent* implementations of the spec in
+DESIGN.md §4; quantized values must agree **bit-for-bit**, stats to float
+tolerance (summation order differs: per-block partials vs one big mean).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quantize import quantize, BLOCK, exp2i, hash_u32, uniform01
+from compile.kernels.ref import quantize_ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape, scale=4.0):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+def _check(x, il, fl, seed, stochastic):
+    q, e, r = quantize(jnp.asarray(x), il, fl, seed, stochastic=stochastic)
+    qr, er, rr = quantize_ref(x, il, fl, seed, stochastic=stochastic)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(float(e), float(er), rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(r), float(rr), rtol=1e-5, atol=1e-7)
+    return np.asarray(q), float(e), float(r)
+
+
+# ---------------------------------------------------------------------------
+# Kernel == oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1,), (7,), (64,), (1000,),
+                                   (64, 100), (28, 28, 1), (2, 3, 4, 5)])
+@pytest.mark.parametrize("stochastic", [True, False])
+def test_matches_ref_shapes(shape, stochastic):
+    _check(_rand(shape), 4, 8, 42, stochastic)
+
+
+@pytest.mark.parametrize("il,fl", [(1, 0), (1, 24), (8, 8), (16, 14),
+                                   (4, 9), (2, 22), (30, 0)])
+def test_matches_ref_formats(il, fl):
+    _check(_rand((513,)), il, fl, 7, True)
+
+
+def test_matches_ref_multiblock():
+    # > BLOCK elements exercises the grid + per-block stat partials.
+    _check(_rand((BLOCK + 1717,)), 5, 10, 3, True)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    il=st.integers(1, 24),
+    fl=st.integers(0, 24),
+    seed=st.integers(0, 2**31 - 1),
+    stochastic=st.booleans(),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_matches_ref_hypothesis(n, il, fl, seed, stochastic, scale):
+    rng = np.random.default_rng(seed % 100003)
+    x = (rng.standard_normal(n) * scale).astype(np.float32)
+    _check(x, il, fl, seed, stochastic)
+
+
+# ---------------------------------------------------------------------------
+# Quantizer semantics (oracle-independent invariants)
+# ---------------------------------------------------------------------------
+
+def test_values_on_grid():
+    q, _, _ = quantize(jnp.asarray(_rand((4096,))), 4, 6, 9)
+    scaled = np.asarray(q) * 64.0
+    np.testing.assert_array_equal(scaled, np.round(scaled))
+
+
+def test_range_clipped():
+    x = _rand((4096,), scale=100.0)
+    q, _, r = quantize(jnp.asarray(x), 4, 6, 9)
+    q = np.asarray(q)
+    assert q.max() <= 8.0 - 2.0**-6 + 1e-9
+    assert q.min() >= -8.0 - 1e-9
+    assert float(r) > 0  # scale=100 guarantees saturation
+
+
+def test_idempotent_nearest():
+    x = jnp.asarray(_rand((2048,)))
+    q1, _, _ = quantize(x, 6, 8, 1, stochastic=False)
+    q2, _, _ = quantize(q1, 6, 8, 2, stochastic=False)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+def test_idempotent_stochastic():
+    # On-grid values have zero fractional part: u < 1 never rounds them away.
+    x = jnp.asarray(_rand((2048,)))
+    q1, _, _ = quantize(x, 6, 8, 1, stochastic=True)
+    q2, e2, _ = quantize(q1, 6, 8, 99, stochastic=True)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    assert float(e2) == 0.0
+
+
+def test_stochastic_unbiased():
+    """E[Q(x)] == x within CI — the whole point of Eq. 2 over Eq. 1."""
+    x = jnp.full((8,), 0.3, jnp.float32)   # 0.3 is off-grid for FL=4
+    acc = np.zeros(8, np.float64)
+    n = 4000
+    for s in range(n):
+        q, _, _ = quantize(x, 4, 4, s)
+        acc += np.asarray(q, np.float64)
+    mean = acc / n
+    # step=1/16; SE of mean ~ step/sqrt(n) ~ 0.001
+    np.testing.assert_allclose(mean, 0.3, atol=5e-3)
+
+
+def test_nearest_biased_on_same_input():
+    """Round-to-nearest maps 0.3 -> 0.3125 every time: bias = 0.0125."""
+    x = jnp.full((8,), 0.3, jnp.float32)
+    q, _, _ = quantize(x, 4, 4, 0, stochastic=False)
+    np.testing.assert_allclose(np.asarray(q), 0.3125, atol=1e-7)
+
+
+def test_error_metric_decreases_with_fl():
+    x = jnp.asarray(_rand((8192,), scale=0.5))
+    es = [float(quantize(x, 4, fl, 5)[1]) for fl in (2, 6, 10, 14)]
+    assert es == sorted(es, reverse=True), es
+
+
+def test_overflow_rate_decreases_with_il():
+    x = jnp.asarray(_rand((8192,), scale=8.0))
+    rs = [float(quantize(x, il, 8, 5)[2]) for il in (1, 3, 5, 8)]
+    assert rs == sorted(rs, reverse=True), rs
+    assert rs[0] > 0.5 and rs[-1] < 0.05
+
+
+def test_zero_input_zero_stats():
+    q, e, r = quantize(jnp.zeros((1024,)), 4, 8, 11)
+    assert float(e) == 0.0 and float(r) == 0.0
+    np.testing.assert_array_equal(np.asarray(q), 0.0)
+
+
+def test_seed_changes_rounding():
+    x = jnp.full((4096,), 0.3, jnp.float32)
+    q1, _, _ = quantize(x, 4, 4, 1)
+    q2, _, _ = quantize(x, 4, 4, 2)
+    assert not np.array_equal(np.asarray(q1), np.asarray(q2))
+
+
+def test_il_fl_clamped():
+    # Out-of-range IL/FL must not produce NaN/inf.
+    x = jnp.asarray(_rand((128,)))
+    q, e, r = quantize(x, 99, 99, 1)
+    assert np.isfinite(np.asarray(q)).all()
+    q, e, r = quantize(x, -5, -5, 1)
+    assert np.isfinite(np.asarray(q)).all()
+
+
+# ---------------------------------------------------------------------------
+# Helper primitives (these are the spec the Rust mirror implements)
+# ---------------------------------------------------------------------------
+
+def test_exp2i_exact():
+    for e in range(-30, 31):
+        assert float(exp2i(jnp.int32(e))) == 2.0 ** e
+
+
+def test_hash_reference_vectors():
+    """Pinned vectors — rust/src/fixedpoint/quantize.rs asserts the same."""
+    idx = jnp.asarray([0, 1, 2, 12345, 0xFFFFFFFF], jnp.uint32)
+    got = [int(v) for v in hash_u32(idx, jnp.uint32(42))]
+    def mix(i, s):
+        x = (i * 0x9E3779B9 + s) & 0xFFFFFFFF
+        x ^= x >> 16; x = (x * 0x85EBCA6B) & 0xFFFFFFFF
+        x ^= x >> 13; x = (x * 0xC2B2AE35) & 0xFFFFFFFF
+        return x ^ (x >> 16)
+    want = [mix(i, 42) for i in [0, 1, 2, 12345, 0xFFFFFFFF]]
+    assert got == want
+
+
+def test_uniform_range():
+    u = np.asarray(uniform01(jnp.arange(10000, dtype=jnp.uint32),
+                             jnp.uint32(7)))
+    assert (u >= 0).all() and (u < 1).all()
+    assert abs(u.mean() - 0.5) < 0.02

@@ -1,0 +1,270 @@
+"""L2 model/step tests: shapes, semantics, convergence smoke, STE behaviour."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.quant import QuantCtx, make_qfun
+
+RNG = np.random.default_rng(99)
+PREC_WIDE = jnp.asarray([6, 18, 6, 18, 6, 20], jnp.float32)
+
+
+def _setup(spec, batch=32):
+    params = [jnp.asarray(p) for p in M.init_params(spec)]
+    mom = [jnp.zeros_like(p) for p in params]
+    x = jnp.asarray(RNG.standard_normal(
+        (batch,) + tuple(spec.input_shape)).astype(np.float32))
+    y = jnp.asarray(RNG.integers(0, 10, batch).astype(np.int32))
+    return params, mom, x, y
+
+
+# ---------------------------------------------------------------------------
+# Shapes / plumbing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mname", ["mlp", "lenet", "transformer"])
+@pytest.mark.parametrize("quantized", [True, False])
+def test_train_step_shapes(mname, quantized):
+    spec = M.MODELS[mname]
+    P = len(spec.params)
+    step = jax.jit(M.make_train_step(spec, quantized=quantized))
+    params, mom, x, y = _setup(spec, batch=8)
+    out = step(*params, *mom, x, y, jnp.float32(0.01), jnp.float32(1.0),
+               PREC_WIDE)
+    assert len(out) == 2 * P + 4
+    for p, o in zip(params + mom, out[:2 * P]):
+        assert p.shape == o.shape
+    nsites = len(M.train_step_sites(spec)) if quantized else 1
+    assert out[2 * P + 2].shape == (nsites,)
+    assert out[2 * P + 3].shape == (nsites,)
+
+
+@pytest.mark.parametrize("mname", ["mlp", "lenet", "transformer"])
+def test_site_list_matches_stats_length(mname):
+    spec = M.MODELS[mname]
+    sites = M.train_step_sites(spec)
+    assert len(sites) == {"mlp": 3 + 8, "lenet": 5 + 16,
+                          "transformer": 7 + 58}[mname]
+    classes = [c for _, c in sites]
+    assert classes.count("act") == {"mlp": 3, "lenet": 5,
+                                    "transformer": 7}[mname]
+    assert classes.count("grad") == len(spec.params)
+    assert classes.count("weight") == len(spec.params)
+
+
+@pytest.mark.parametrize("mname", ["mlp", "lenet"])
+def test_eval_step(mname):
+    spec = M.MODELS[mname]
+    evalf = jax.jit(M.make_eval_step(spec, quantized=True))
+    params, _, x, y = _setup(spec, batch=16)
+    loss_sum, correct = evalf(*params, x, y, PREC_WIDE)
+    assert 0 <= float(correct) <= 16
+    assert float(loss_sum) / 16 > 1.0  # untrained ~ ln(10)
+
+
+def test_init_deterministic():
+    a = M.init_params(M.MLP, seed=0)
+    b = M.init_params(M.MLP, seed=0)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    c = M.init_params(M.MLP, seed=1)
+    assert not np.array_equal(a[0], c[0])
+
+
+def test_biases_zero_init():
+    for spec in (M.MLP, M.LENET):
+        for (name, _), p in zip(spec.params, M.init_params(spec)):
+            if M._is_bias(name):
+                assert np.all(p == 0), name
+
+
+def test_transformer_init_conventions():
+    spec = M.TRANSFORMER
+    for (name, _), p in zip(spec.params, M.init_params(spec)):
+        if name.startswith("g"):
+            assert np.all(p == 1.0), name      # layernorm gains
+        elif name == "pos":
+            assert 0 < np.abs(p).max() < 0.2   # small positional init
+        elif M._is_bias(name):
+            assert np.all(p == 0), name
+
+
+def test_transformer_learns_on_toy():
+    spec = M.TRANSFORMER
+    P = len(spec.params)
+    step = jax.jit(M.make_train_step(spec, quantized=True))
+    params = [jnp.asarray(p) for p in M.init_params(spec)]
+    mom = [jnp.zeros_like(p) for p in params]
+    x, y = _toy_problem(spec, n=64)
+    state = list(params) + list(mom)
+    loss0 = None
+    for i in range(25):
+        out = step(*state, x, y, jnp.float32(0.02), jnp.float32(float(i)),
+                   PREC_WIDE)
+        state = list(out[:2 * P])
+        if loss0 is None:
+            loss0 = float(out[2 * P])
+    assert float(out[2 * P]) < 0.6 * loss0, (loss0, float(out[2 * P]))
+
+
+# ---------------------------------------------------------------------------
+# Semantics
+# ---------------------------------------------------------------------------
+
+def test_weights_on_grid_after_step():
+    """Stored weights must be on the <ILw, FLw> grid (fixed-point storage)."""
+    spec = M.MLP
+    P = len(spec.params)
+    step = jax.jit(M.make_train_step(spec, quantized=True))
+    params, mom, x, y = _setup(spec)
+    prec = jnp.asarray([4, 8, 6, 12, 6, 16], jnp.float32)
+    out = step(*params, *mom, x, y, jnp.float32(0.05), jnp.float32(1.0), prec)
+    for w in out[:P]:
+        scaled = np.asarray(w) * 2.0**8
+        np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-3)
+
+
+def test_float_step_is_pure_float():
+    """Float baseline must not quantize: step == hand-computed SGD update."""
+    spec = M.MLP
+    P = len(spec.params)
+    step = jax.jit(M.make_train_step(spec, quantized=False))
+    params, mom, x, y = _setup(spec)
+    lr = jnp.float32(0.01)
+    out = step(*params, *mom, x, y, lr, jnp.float32(1.0), PREC_WIDE)
+
+    def loss_fn(ps):
+        ctx = QuantCtx(PREC_WIDE, 0.0, enabled=False)
+        logits = spec.forward(ps, x, ctx)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    grads = jax.grad(loss_fn)(params)
+    for w, g, w_new in zip(params, grads, out[:P]):
+        v = M.MU * 0.0 + lr * (g + M.WD * w)
+        np.testing.assert_allclose(np.asarray(w - v), np.asarray(w_new),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_determinism_same_seed():
+    spec = M.MLP
+    step = jax.jit(M.make_train_step(spec, quantized=True))
+    params, mom, x, y = _setup(spec)
+    args = (*params, *mom, x, y, jnp.float32(0.01), jnp.float32(5.0),
+            PREC_WIDE)
+    o1, o2 = step(*args), step(*args)
+    for a, b in zip(o1, o2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_different_seed_different_result():
+    spec = M.MLP
+    P = len(spec.params)
+    step = jax.jit(M.make_train_step(spec, quantized=True))
+    params, mom, x, y = _setup(spec)
+    prec = jnp.asarray([4, 6, 4, 6, 4, 8], jnp.float32)  # coarse => visible
+    o1 = step(*params, *mom, x, y, jnp.float32(0.05), jnp.float32(1.0), prec)
+    o2 = step(*params, *mom, x, y, jnp.float32(0.05), jnp.float32(2.0), prec)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(o1[:P], o2[:P]))
+
+
+def test_coarse_weight_prec_raises_weight_error():
+    spec = M.MLP
+    P = len(spec.params)
+    step = jax.jit(M.make_train_step(spec, quantized=True))
+    params, mom, x, y = _setup(spec)
+    sites = M.train_step_sites(spec)
+    widx = [i for i, (_, c) in enumerate(sites) if c == "weight"]
+    es = {}
+    for flw in (4, 12):
+        prec = jnp.asarray([4, flw, 6, 12, 6, 16], jnp.float32)
+        out = step(*params, *mom, x, y, jnp.float32(0.01), jnp.float32(1.0),
+                   prec)
+        evec = np.asarray(out[2 * P + 2])
+        es[flw] = evec[widx].mean()
+    assert es[4] > es[12]
+
+
+def test_saturating_act_prec_raises_overflow():
+    spec = M.MLP
+    P = len(spec.params)
+    step = jax.jit(M.make_train_step(spec, quantized=True))
+    params, mom, x, y = _setup(spec)
+    sites = M.train_step_sites(spec)
+    aidx = [i for i, (_, c) in enumerate(sites) if c == "act"]
+    prec = jnp.asarray([6, 12, 1, 12, 6, 16], jnp.float32)  # ILa=1 saturates
+    out = step(*params, *mom, x, y, jnp.float32(0.01), jnp.float32(1.0), prec)
+    rvec = np.asarray(out[2 * P + 3])
+    assert rvec[aidx].max() > 0.01
+
+
+# ---------------------------------------------------------------------------
+# STE
+# ---------------------------------------------------------------------------
+
+def test_ste_passes_gradient():
+    qfun = make_qfun(True)
+
+    def f(x):
+        q, _, _ = qfun(x, jnp.float32(6), jnp.float32(12), jnp.float32(6),
+                       jnp.float32(20), jnp.float32(1.0))
+        return jnp.sum(q * q)
+
+    x = jnp.asarray(RNG.standard_normal(64).astype(np.float32))
+    g = jax.grad(f)(x)
+    # STE: d/dx sum(Q(x)^2) ~ 2 Q(x); gradient itself then quantized at FL=20.
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(x),
+                               rtol=0.1, atol=0.05)
+
+
+def test_ste_gradient_is_quantized():
+    qfun = make_qfun(True)
+    flg = 8
+
+    def f(x):
+        q, _, _ = qfun(x, jnp.float32(6), jnp.float32(18), jnp.float32(6),
+                       jnp.float32(flg), jnp.float32(1.0))
+        return jnp.sum(jnp.sin(q))
+
+    x = jnp.asarray(RNG.standard_normal(64).astype(np.float32))
+    g = np.asarray(jax.grad(f)(x))
+    scaled = g * 2.0**flg
+    np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Convergence smoke
+# ---------------------------------------------------------------------------
+
+def _toy_problem(spec, n=256):
+    """Linearly-separable-ish synthetic task the model must fit quickly."""
+    rng = np.random.default_rng(5)
+    protos = rng.standard_normal((10,) + tuple(spec.input_shape)) * 1.5
+    y = rng.integers(0, 10, n)
+    x = protos[y] + 0.3 * rng.standard_normal((n,) + tuple(spec.input_shape))
+    return (jnp.asarray(x.astype(np.float32)),
+            jnp.asarray(y.astype(np.int32)))
+
+
+@pytest.mark.parametrize("quantized", [True, False])
+def test_mlp_converges_on_toy(quantized):
+    spec = M.MLP
+    P = len(spec.params)
+    step = jax.jit(M.make_train_step(spec, quantized=quantized))
+    params = [jnp.asarray(p) for p in M.init_params(spec)]
+    mom = [jnp.zeros_like(p) for p in params]
+    x, y = _toy_problem(spec)
+    state = list(params) + list(mom)
+    loss0 = None
+    for i in range(60):
+        out = step(*state, x, y, jnp.float32(0.05), jnp.float32(float(i)),
+                   PREC_WIDE)
+        state = list(out[:2 * P])
+        if loss0 is None:
+            loss0 = float(out[2 * P])
+    assert float(out[2 * P]) < 0.3 * loss0
+    assert float(out[2 * P + 1]) > 0.9

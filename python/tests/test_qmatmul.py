@@ -1,0 +1,66 @@
+"""Quantized-matmul Pallas kernel vs oracle."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qmatmul import qmatmul, BM, BK, BN
+from compile.kernels.ref import qmatmul_ref, quantize_ref
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (128, 64, 128),
+                                   (64, 128, 64), (192, 128, 64)])
+@pytest.mark.parametrize("stochastic", [True, False])
+def test_matches_ref(m, k, n, stochastic):
+    a, b = _rand((m, k)), _rand((k, n))
+    c = qmatmul(jnp.asarray(a), jnp.asarray(b), 4, 10, 4, 10, 3,
+                stochastic=stochastic)
+    cr = qmatmul_ref(a, b, 4, 10, 4, 10, 3, stochastic=stochastic)
+    # Blocked accumulation reorders the k-sum: allclose, not equality.
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_single_kblock_exact():
+    # One k-block means identical accumulation order: bit-exact.
+    a, b = _rand((BM, BK)), _rand((BK, BN))
+    c = qmatmul(jnp.asarray(a), jnp.asarray(b), 4, 10, 4, 10, 3)
+    cr = qmatmul_ref(a, b, 4, 10, 4, 10, 3)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+
+
+def test_operand_streams_decorrelated():
+    """A and B tiles at the same flat index must not share noise."""
+    x = _rand((64, 64))
+    qa, _, _ = quantize_ref(x, 4, 10, 3)
+    qb, _, _ = quantize_ref(x, 4, 10, 3 + 0x1234567)
+    assert not np.array_equal(np.asarray(qa), np.asarray(qb))
+
+
+def test_rejects_unaligned():
+    with pytest.raises(AssertionError):
+        qmatmul(jnp.zeros((65, 64)), jnp.zeros((64, 64)), 4, 8, 4, 8, 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mi=st.integers(1, 3), ki=st.integers(1, 3), ni=st.integers(1, 3),
+    il=st.integers(2, 8), fl=st.integers(4, 14),
+    seed=st.integers(0, 2**30),
+)
+def test_matches_ref_hypothesis(mi, ki, ni, il, fl, seed):
+    rng = np.random.default_rng(seed % 65537)
+    a = (rng.standard_normal((mi * BM, ki * BK))).astype(np.float32)
+    b = (rng.standard_normal((ki * BK, ni * BN))).astype(np.float32)
+    c = qmatmul(jnp.asarray(a), jnp.asarray(b), il, fl, il, fl, seed)
+    cr = qmatmul_ref(a, b, il, fl, il, fl, seed)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr),
+                               rtol=1e-5, atol=1e-4)

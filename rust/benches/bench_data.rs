@@ -1,0 +1,39 @@
+//! Data-pipeline benches: synthetic digit generation and batch filling.
+//! DESIGN §7 target: generation >= 10^6 images/s is NOT expected (each image
+//! rasterizes ~50 segments x 784 pixels); the real target is that batch
+//! *filling* (the hot-loop part) is memcpy-speed and generation is a one-off
+//! startup cost far below training time.
+
+use qedps::bench::{black_box, bench, report_throughput, BenchOpts};
+use qedps::data::{synth, Batcher, IMG_PIXELS};
+
+fn main() {
+    qedps::util::logging::set_level(qedps::util::logging::Level::Warn);
+    println!("== bench_data (pipeline) ==");
+
+    let opts = BenchOpts { warmup_iters: 1, min_iters: 5, min_time_s: 1.0 };
+    let r = qedps::bench::bench_with("synth/generate-1000", &opts, || {
+        black_box(synth::generate(1000, 42).n);
+    });
+    report_throughput(&r, 1000);
+
+    let ds = synth::generate(10_000, 1);
+    let mut b = Batcher::new(&ds, 64, 2);
+    let mut x = vec![0.0f32; 64 * IMG_PIXELS];
+    let mut y = vec![0i32; 64];
+    let r = bench("batcher/fill-64", || {
+        b.next_into(&mut x, &mut y);
+        black_box(x[0]);
+    });
+    report_throughput(&r, 64);
+
+    // IDX round-trip (startup path)
+    let dir = std::env::temp_dir().join("qedps_bench_idx");
+    std::fs::create_dir_all(&dir).unwrap();
+    let small = synth::generate(1000, 3);
+    let path = dir.join("imgs.idx");
+    let r = qedps::bench::bench_with("idx/write-1000", &opts, || {
+        qedps::data::mnist::write_idx_images(&path, &small).unwrap();
+    });
+    report_throughput(&r, 1000);
+}

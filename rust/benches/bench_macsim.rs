@@ -1,0 +1,49 @@
+//! MAC-simulator benches: cycle-model pricing (used once per logged step)
+//! and the exact-arithmetic execution path (used by validation tests).
+
+use qedps::bench::{bench, black_box, report_throughput};
+use qedps::fixedpoint::{quantize_slice, Format, RoundMode};
+use qedps::macsim::{self, MacUnit};
+use qedps::policy::PrecState;
+use qedps::util::rng::Pcg32;
+
+fn main() {
+    qedps::util::logging::set_level(qedps::util::logging::Level::Warn);
+    println!("== bench_macsim ==");
+    let unit = MacUnit::default();
+    let layers = macsim::layer_costs(
+        &[
+            ("cw1", vec![5, 5, 1, 20]),
+            ("cw2", vec![5, 5, 20, 50]),
+            ("fw1", vec![800, 500]),
+            ("fw2", vec![500, 10]),
+        ],
+        (28, 28),
+        64,
+    );
+
+    let mut bits = 4i32;
+    bench("macsim/iteration_cycles(lenet)", || {
+        bits = 4 + (bits + 1) % 20;
+        let p = PrecState::uniform(Format::new(bits / 2 + 1, bits - bits / 2 - 1));
+        black_box(macsim::iteration_cycles(&unit, &layers, &p));
+    });
+
+    let traj: Vec<PrecState> =
+        (0..3000).map(|i| PrecState::uniform(Format::new(2, 6 + (i % 12) as i32))).collect();
+    bench("macsim/trajectory_speedup(3000 iters)", || {
+        black_box(macsim::trajectory_speedup(&unit, &layers, &traj));
+    });
+
+    // exact integer-MAC execution (validation path)
+    let mut rng = Pcg32::seeded(4);
+    let fmt = Format::new(4, 8);
+    let a: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..4096).map(|_| rng.normal() as f32 * 0.1).collect();
+    let (qa, _) = quantize_slice(&a, fmt, 1, RoundMode::Stochastic);
+    let (qw, _) = quantize_slice(&w, fmt, 2, RoundMode::Stochastic);
+    let r = bench("macsim/execute_dot-4096", || {
+        black_box(unit.execute_dot(&qa, &qw, fmt, fmt).0);
+    });
+    report_throughput(&r, 4096);
+}

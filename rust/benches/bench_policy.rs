@@ -1,0 +1,37 @@
+//! L3 controller benches: per-iteration cost of every precision policy.
+//! The controller runs once per training step — it must be measured in
+//! nanoseconds, not microseconds, to keep L3 overhead <5% (DESIGN §7).
+
+use qedps::bench::{bench, black_box};
+use qedps::policy::{make_policy, ClassStats, Feedback, PolicyOptions};
+use qedps::util::rng::Pcg32;
+
+fn main() {
+    qedps::util::logging::set_level(qedps::util::logging::Level::Warn);
+    println!("== bench_policy (controller update cost) ==");
+    let opts = PolicyOptions::default();
+    for scheme in ["qedps", "na", "courbariaux", "fixed", "float", "schedule"] {
+        let mut p = make_policy(scheme, &opts).unwrap();
+        let mut st = p.init();
+        let mut rng = Pcg32::seeded(3);
+        let mut iter = 0u64;
+        bench(&format!("policy/{scheme}"), || {
+            // fresh feedback each call so branch predictors see real work
+            let s = ClassStats { e: rng.next_f32() * 1e-3, r: rng.next_f32() * 1e-3 };
+            let fb = Feedback { iter, loss: 1.0 / (iter + 1) as f32,
+                                weights: s, acts: s, grads: s };
+            iter += 1;
+            st = p.update(st, &fb);
+            black_box(st.weights.bits());
+        });
+    }
+
+    // stat aggregation (runs per step over per-site vectors)
+    let vals: Vec<f32> = (0..21).map(|i| i as f32 * 1e-4).collect();
+    for agg in [qedps::policy::AggMode::Mean, qedps::policy::AggMode::Max,
+                qedps::policy::AggMode::Last] {
+        bench(&format!("agg/{agg:?}/21-sites"), || {
+            black_box(agg.collapse(&vals));
+        });
+    }
+}

@@ -1,0 +1,79 @@
+//! L1 benches: the quantize hot-spot — AOT Pallas artifact vs the Rust
+//! software mirror, stochastic vs nearest (Gupta et al.'s "negligible
+//! overhead" claim), plus the quantized matmul.
+
+use qedps::bench::{bench, black_box, report_throughput};
+use qedps::fixedpoint::{quantize_slice_at, Format, RoundMode};
+use qedps::runtime::{literal_f32, Runtime};
+use qedps::util::rng::Pcg32;
+use xla::Literal;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| rng.normal() as f32 * 2.0).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    qedps::util::logging::set_level(qedps::util::logging::Level::Warn);
+    let mut rt = Runtime::create()?;
+    println!("== bench_quantize (L1 hot-spot) ==");
+
+    for (module, n) in [("quantize_sr_4096", 4096usize),
+                        ("quantize_sr_131072", 131072),
+                        ("quantize_rn_131072", 131072)] {
+        let exe = rt.load(module)?;
+        let x = randvec(n, 7);
+        let xl = literal_f32(&x, &[n])?;
+        let il = Literal::scalar(4i32);
+        let fl = Literal::scalar(10i32);
+        let mut seed = 0i32;
+        let r = bench(&format!("hlo/{module}"), || {
+            seed += 1;
+            let s = Literal::scalar(seed);
+            let outs = exe.run(&[&xl, &il, &fl, &s]).unwrap();
+            black_box(outs[1].get_first_element::<f32>().unwrap());
+        });
+        report_throughput(&r, n);
+    }
+
+    // Rust mirror (policy-side / macsim-side quantizer)
+    for n in [4096usize, 131072] {
+        let x = randvec(n, 9);
+        let mut out = Vec::new();
+        let fmt = Format::new(4, 10);
+        let mut seed = 0;
+        let r = bench(&format!("rust/quantize_sr_{n}"), || {
+            seed += 1;
+            let s = quantize_slice_at(&x, 0, fmt, seed, RoundMode::Stochastic,
+                                      &mut out);
+            black_box(s.e);
+        });
+        report_throughput(&r, n);
+        let mut seed = 0;
+        let r = bench(&format!("rust/quantize_rn_{n}"), || {
+            seed += 1;
+            let s = quantize_slice_at(&x, 0, fmt, seed, RoundMode::Nearest,
+                                      &mut out);
+            black_box(s.e);
+        });
+        report_throughput(&r, n);
+    }
+
+    // quantized matmul artifact (the MAC-pipeline demo)
+    {
+        let exe = rt.load("qmatmul_256")?;
+        let a = literal_f32(&randvec(256 * 256, 11), &[256, 256])?;
+        let b = literal_f32(&randvec(256 * 256, 12), &[256, 256])?;
+        let prec = literal_f32(&[4.0, 10.0, 4.0, 10.0], &[4])?;
+        let seed = Literal::scalar(3i32);
+        let r = bench("hlo/qmatmul_256", || {
+            let outs = exe.run(&[&a, &b, &prec, &seed]).unwrap();
+            black_box(outs[0].element_count());
+        });
+        // 2*M*N*K flops
+        let flops = 2.0 * 256.0f64.powi(3);
+        println!("{:<44} {:>9.2} GFLOP/s",
+                 "hlo/qmatmul_256 (flops)", flops / (r.mean_ns / 1e9) / 1e9);
+    }
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! L2/L3 benches: full train-step and eval-step latency per model and
+//! variant — the numbers behind every wall-clock claim in EXPERIMENTS.md.
+//! The quantized-vs-float delta is the *emulation overhead* (the paper's
+//! hardware would pay nothing; we pay the rounding arithmetic).
+
+use qedps::bench::{black_box, BenchOpts};
+use qedps::config::ExperimentConfig;
+use qedps::data::{synth, Batcher};
+use qedps::runtime::Runtime;
+use qedps::trainer::Trainer;
+
+fn bench_model(rt: &mut Runtime, model: &str, scheme: &str) -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = model.into();
+    cfg.scheme = scheme.into();
+    cfg.train_n = 512;
+    cfg.test_n = 200;
+    let ds = synth::generate(512, 5);
+    let mut trainer = Trainer::new(rt, cfg.clone())?;
+    let mut batcher = Batcher::new(&ds, trainer.train_batch_size(), 1);
+    let mut iter = 0u64;
+    let opts = BenchOpts { warmup_iters: 3, min_iters: 10, min_time_s: 2.0 };
+    qedps::bench::bench_with(&format!("step/{model}/{scheme}"), &opts, || {
+        trainer.fill_batch(&mut batcher);
+        iter += 1;
+        black_box(trainer.step(iter).unwrap().loss);
+    });
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    qedps::util::logging::set_level(qedps::util::logging::Level::Warn);
+    let mut rt = Runtime::create()?;
+    println!("== bench_step (train/eval step latency) ==");
+
+    for model in ["mlp", "lenet"] {
+        for scheme in ["qedps", "na", "float"] {
+            // qedps => stochastic artifact, na => nearest, float => float
+            bench_model(&mut rt, model, scheme)?;
+        }
+    }
+
+    // eval latency (full test-set pass / per batch)
+    for model in ["mlp", "lenet"] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = model.into();
+        let test = synth::generate(500, 6);
+        let mut trainer = Trainer::new(&mut rt, cfg)?;
+        let opts = BenchOpts { warmup_iters: 1, min_iters: 5, min_time_s: 1.0 };
+        qedps::bench::bench_with(&format!("eval/{model}/500-images"), &opts, || {
+            black_box(trainer.evaluate(&test).unwrap());
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Paper-artifact regeneration in bench form: one section per table/figure
+//! (DESIGN.md §3), on a reduced budget so `cargo bench` finishes in
+//! minutes.  Full-scale regeneration is `repro figures` / `repro compare`
+//! and `examples/lenet_mnist.rs`; EXPERIMENTS.md records the full runs.
+//!
+//! Sections:
+//!   [Fig 3]   qedps bit-width trajectory (mlp, reduced iters)
+//!   [Fig 4]   accuracy: qedps vs float vs fixed13
+//!   [Table 1] scheme head-to-head rows
+//!   [Eq 1/2]  stochastic vs nearest rounding A/B
+//!   [§6]      measured-trajectory hardware speedup
+//!   [ablation] stat-aggregation mode (mean/max/last)
+
+use qedps::config::ExperimentConfig;
+use qedps::coordinator::{self, figures};
+use qedps::runtime::Runtime;
+use qedps::trainer::run_experiment;
+use qedps::util::Stopwatch;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp".into();
+    cfg.iters = 250;
+    cfg.train_n = 4_000;
+    cfg.test_n = 1_000;
+    cfg.eval_every = 125;
+    cfg.log_every = 5;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    qedps::util::logging::set_level(qedps::util::logging::Level::Warn);
+    let mut rt = Runtime::create()?;
+    let total = Stopwatch::start();
+
+    println!("== bench_tables: paper artifacts on a reduced budget ==\n");
+
+    // ---- Fig 3 ---------------------------------------------------------
+    let t = Stopwatch::start();
+    let cfg = base_cfg();
+    let hist = figures::fig3(&mut rt, &cfg)?;
+    println!("[Fig 3] regenerated in {:.1}s\n", t.elapsed_s());
+
+    // ---- Fig 4 ---------------------------------------------------------
+    let t = Stopwatch::start();
+    figures::fig4(&mut rt, &cfg)?;
+    println!("[Fig 4] regenerated in {:.1}s\n", t.elapsed_s());
+
+    // ---- Table 1 -------------------------------------------------------
+    let t = Stopwatch::start();
+    let rows = coordinator::compare_schemes(
+        &mut rt,
+        &cfg,
+        &["qedps", "na", "courbariaux", "gupta88", "fixed13", "float"],
+    )?;
+    coordinator::print_compare_table(&rows);
+    println!("[Table 1] regenerated in {:.1}s\n", t.elapsed_s());
+
+    // ---- Eq. 1 vs Eq. 2 ------------------------------------------------
+    let t = Stopwatch::start();
+    figures::rounding_ab(&mut rt, &cfg)?;
+    println!("[Eq 1/2] A/B in {:.1}s\n", t.elapsed_s());
+
+    // ---- §6 hardware speedup -------------------------------------------
+    let speedup = figures::history_speedup(&rt, &cfg.model, &hist)?;
+    println!("[§6] measured-trajectory flexible-MAC speedup: {speedup:.2}x\n");
+
+    // ---- aggregation ablation ------------------------------------------
+    println!("[ablation] stat aggregation across sites:");
+    for agg in ["mean", "max", "last"] {
+        let mut c = base_cfg();
+        c.iters = 150;
+        c.agg = qedps::policy::AggMode::from_str(agg).unwrap();
+        let h = run_experiment(&mut rt, &c)?;
+        let s = h.summary();
+        println!("  agg={agg:<5} acc={:.4} bits(w/a/g)={:.1}/{:.1}/{:.1}",
+                 s.final_test_acc, s.mean_weight_bits, s.mean_act_bits,
+                 s.mean_grad_bits);
+    }
+
+    println!("\nbench_tables total: {:.1}s", total.elapsed_s());
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + timed iterations with mean/stddev/min reporting and a plain
+//! `name,mean_ns,stddev_ns,min_ns,iters` CSV-ish line for scripting.  Used
+//! by every target in `rust/benches/` (`cargo bench` runs them via
+//! `harness = false`).
+
+use crate::util::{Stopwatch, Summary};
+
+pub struct BenchOpts {
+    pub warmup_iters: u64,
+    pub min_iters: u64,
+    pub min_time_s: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { warmup_iters: 3, min_iters: 10, min_time_s: 1.0 }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn report(&self) {
+        let (val, unit) = human_time(self.mean_ns);
+        let (min, min_unit) = human_time(self.min_ns);
+        println!(
+            "{:<44} {:>9.3} {:<2} (±{:>5.1}%, min {:>8.3} {}, n={})",
+            self.name,
+            val,
+            unit,
+            100.0 * self.stddev_ns / self.mean_ns.max(1e-12),
+            min,
+            min_unit,
+            self.iters
+        );
+    }
+}
+
+fn human_time(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "µs")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s")
+    }
+}
+
+/// Time `f` (whole-call granularity) under the default opts.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench_with(name, &BenchOpts::default(), f)
+}
+
+pub fn bench_with<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut stats = Summary::new();
+    let total = Stopwatch::start();
+    let mut iters = 0u64;
+    while iters < opts.min_iters || total.elapsed_s() < opts.min_time_s {
+        let t = Stopwatch::start();
+        f();
+        stats.add(t.elapsed_s() * 1e9);
+        iters += 1;
+        if iters >= 1_000_000 {
+            break;
+        }
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats.mean(),
+        stddev_ns: stats.stddev(),
+        min_ns: stats.min,
+    };
+    r.report();
+    r
+}
+
+/// Throughput helper: report elements/s alongside the timing.
+pub fn report_throughput(r: &BenchResult, elems: usize) {
+    let eps = elems as f64 / (r.mean_ns / 1e9);
+    println!(
+        "{:<44} {:>9.1} Melem/s",
+        format!("{} (throughput)", r.name),
+        eps / 1e6
+    );
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let opts = BenchOpts { warmup_iters: 1, min_iters: 5, min_time_s: 0.0 };
+        let mut acc = 0u64;
+        let r = bench_with("noop-ish", &opts, || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(500.0).1, "ns");
+        assert_eq!(human_time(5e4).1, "µs");
+        assert_eq!(human_time(5e7).1, "ms");
+        assert_eq!(human_time(5e9).1, "s");
+    }
+}

@@ -1,0 +1,156 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Model: `repro <subcommand> [--flag value] [--switch] [positional...]`.
+//! Flags may appear as `--key value` or `--key=value`.  Unknown flags are
+//! an error (catches typos in experiment scripts).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Declares the accepted surface for parsing/validation + help text.
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// (flag, value-name, help) — flags that take a value.
+    pub flags: &'static [(&'static str, &'static str, &'static str)],
+    /// (switch, help) — boolean flags.
+    pub switches: &'static [(&'static str, &'static str)],
+}
+
+impl Args {
+    pub fn parse(spec: &Spec, argv: &[String]) -> Result<Args> {
+        let mut args = Args {
+            subcommand: None,
+            flags: BTreeMap::new(),
+            switches: Vec::new(),
+            positional: Vec::new(),
+        };
+        let takes_value: Vec<&str> = spec.flags.iter().map(|(f, _, _)| *f).collect();
+        let is_switch: Vec<&str> = spec.switches.iter().map(|(s, _)| *s).collect();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                if is_switch.contains(&key) {
+                    if inline.is_some() {
+                        bail!("switch --{key} takes no value");
+                    }
+                    args.switches.push(key.to_string());
+                } else if takes_value.contains(&key) {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .with_context(|| format!("--{key} needs a value"))?
+                            .clone(),
+                    };
+                    args.flags.entry(key.to_string()).or_default().push(val);
+                } else {
+                    bail!("unknown flag --{key} for '{}'\n{}", spec.name, spec.usage());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences (for repeatable flags like `--set`).
+    pub fn flag_all(&self, key: &str) -> &[String] {
+        self.flags.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key}={s}: {e}")),
+        }
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+impl Spec {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.name, self.about);
+        for (f, v, h) in self.flags {
+            s.push_str(&format!("  --{f} <{v}>  {h}\n"));
+        }
+        for (f, h) in self.switches {
+            s.push_str(&format!("  --{f}  {h}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: Spec = Spec {
+        name: "test",
+        about: "testing",
+        flags: &[("iters", "N", "iterations"), ("set", "k=v", "override")],
+        switches: &[("verbose", "more logs")],
+    };
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_switches() {
+        let a = Args::parse(&SPEC, &argv(&["--iters", "100", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.flag("iters"), Some("100"));
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.flag_parse::<u64>("iters").unwrap(), Some(100));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&SPEC, &argv(&["--iters=42"])).unwrap();
+        assert_eq!(a.flag("iters"), Some("42"));
+    }
+
+    #[test]
+    fn repeatable() {
+        let a = Args::parse(&SPEC, &argv(&["--set", "a=1", "--set", "b=2"])).unwrap();
+        assert_eq!(a.flag_all("set"), &["a=1".to_string(), "b=2".to_string()]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(Args::parse(&SPEC, &argv(&["--nope"])).is_err());
+        assert!(Args::parse(&SPEC, &argv(&["--iters"])).is_err());
+        assert!(Args::parse(&SPEC, &argv(&["--verbose=1"])).is_err());
+        assert!(Args::parse(&SPEC, &argv(&["--iters", "abc"]))
+            .unwrap()
+            .flag_parse::<u64>("iters")
+            .is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! Experiment configuration: schema + TOML-subset loader + CLI overrides.
+//!
+//! Resolution order: built-in defaults (the paper's hyperparameters) <
+//! `--config file.toml` < individual CLI flags.  `configs/` in the repo
+//! ships one file per paper experiment.
+
+pub mod toml;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fixedpoint::Format;
+use crate::policy::{AggMode, PolicyOptions, PrecState};
+use toml::{TomlDoc, TomlValue};
+
+/// Everything one training run needs (the paper's §4 settings are the
+/// defaults).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// `mlp` or `lenet`.
+    pub model: String,
+    /// Policy scheme name (see [`crate::policy::make_policy`]).
+    pub scheme: String,
+    pub iters: u64,
+    /// Initial learning rate (paper: 0.01).
+    pub lr0: f64,
+    /// Inverse-decay gamma (paper: 1e-4).
+    pub gamma: f64,
+    /// Inverse-decay power (paper: 0.75).
+    pub power: f64,
+    /// E_max / R_max thresholds (paper: 0.01% = 1e-4).
+    pub e_max: f64,
+    pub r_max: f64,
+    /// Initial precision per class.
+    pub init_weights: Format,
+    pub init_acts: Format,
+    pub init_grads: Format,
+    /// Stat aggregation across sites of a class.
+    pub agg: AggMode,
+    /// Dataset sizes (synthetic path) and seeds.
+    pub train_n: usize,
+    pub test_n: usize,
+    pub seed: u64,
+    /// Evaluate on the test set every N iterations (0 = only at the end).
+    pub eval_every: u64,
+    /// Log/record metrics every N iterations.
+    pub log_every: u64,
+    /// Force an artifact rounding mode regardless of the policy's default
+    /// (`"stochastic"`/`"nearest"`) — used by the Eq.1-vs-Eq.2 A/B.
+    pub force_rounding: Option<String>,
+    /// Output directory for CSV/JSON records.
+    pub out_dir: String,
+    /// Optional checkpoint directory.
+    pub checkpoint_dir: Option<String>,
+    pub checkpoint_every: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        let opts = PolicyOptions::default();
+        Self {
+            model: "lenet".into(),
+            scheme: "qedps".into(),
+            iters: 3000,
+            lr0: 0.01,
+            gamma: 1e-4,
+            power: 0.75,
+            e_max: 1e-4,
+            r_max: 1e-4,
+            init_weights: opts.init.weights,
+            init_acts: opts.init.acts,
+            init_grads: opts.init.grads,
+            agg: AggMode::Mean,
+            train_n: 10_000,
+            test_n: 2_000,
+            seed: 2018,
+            eval_every: 500,
+            log_every: 50,
+            force_rounding: None,
+            out_dir: "target/experiments".into(),
+            checkpoint_dir: None,
+            checkpoint_every: 1000,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Paper learning-rate schedule: `lr = lr0 * (1 + gamma*iter)^-power`.
+    pub fn lr_at(&self, iter: u64) -> f64 {
+        self.lr0 * (1.0 + self.gamma * iter as f64).powf(-self.power)
+    }
+
+    pub fn policy_options(&self) -> PolicyOptions {
+        PolicyOptions {
+            e_max: self.e_max as f32,
+            r_max: self.r_max as f32,
+            init: PrecState {
+                weights: self.init_weights,
+                acts: self.init_acts,
+                grads: self.init_grads,
+            },
+        }
+    }
+
+    /// Load from a TOML file and fold it over the defaults.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let doc = toml::parse(&text).with_context(|| format!("parsing {path}"))?;
+        let mut cfg = Self::default();
+        cfg.apply_doc(&doc)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_doc(&mut self, doc: &TomlDoc) -> Result<()> {
+        for (section, table) in doc {
+            for (key, val) in table {
+                let path = if section.is_empty() {
+                    key.clone()
+                } else {
+                    format!("{section}.{key}")
+                };
+                self.apply_kv(&path, val)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one dotted-path override (shared by TOML and `--set k=v`).
+    pub fn apply_kv(&mut self, key: &str, val: &TomlValue) -> Result<()> {
+        let want_str =
+            || -> Result<String> { Ok(val.as_str().context("expected string")?.into()) };
+        let want_f = || val.as_f64().context("expected number");
+        let want_u = || -> Result<u64> { Ok(val.as_f64().context("expected int")? as u64) };
+        let want_fmt = || -> Result<Format> {
+            match val {
+                TomlValue::Arr(v) if v.len() == 2 => Ok(Format::new(
+                    v[0].as_f64().context("IL")? as i32,
+                    v[1].as_f64().context("FL")? as i32,
+                )),
+                _ => bail!("expected [IL, FL] pair"),
+            }
+        };
+        match key {
+            "model" => self.model = want_str()?,
+            "scheme" => self.scheme = want_str()?,
+            "iters" => self.iters = want_u()?,
+            "lr0" => self.lr0 = want_f()?,
+            "gamma" => self.gamma = want_f()?,
+            "power" => self.power = want_f()?,
+            "policy.e_max" | "e_max" => self.e_max = want_f()?,
+            "policy.r_max" | "r_max" => self.r_max = want_f()?,
+            "policy.init_weights" | "init_weights" => self.init_weights = want_fmt()?,
+            "policy.init_acts" | "init_acts" => self.init_acts = want_fmt()?,
+            "policy.init_grads" | "init_grads" => self.init_grads = want_fmt()?,
+            "policy.agg" | "agg" => {
+                self.agg = AggMode::from_str(val.as_str().unwrap_or(""))
+                    .context("agg must be mean|max|last")?
+            }
+            "data.train_n" | "train_n" => self.train_n = want_u()? as usize,
+            "data.test_n" | "test_n" => self.test_n = want_u()? as usize,
+            "seed" | "data.seed" => self.seed = want_u()?,
+            "eval_every" => self.eval_every = want_u()?,
+            "log_every" => self.log_every = want_u()?,
+            "out_dir" => self.out_dir = want_str()?,
+            "force_rounding" => self.force_rounding = Some(want_str()?),
+            "checkpoint.dir" | "checkpoint_dir" => self.checkpoint_dir = Some(want_str()?),
+            "checkpoint.every" | "checkpoint_every" => self.checkpoint_every = want_u()?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse `k=v` (CLI `--set`) using TOML value syntax for `v`.
+    pub fn apply_set(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .with_context(|| format!("--set needs key=value, got '{kv}'"))?;
+        let doc = toml::parse(&format!("x = {}", v.trim()))?;
+        self.apply_kv(k.trim(), &doc[""]["x"])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_settings() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.lr0, 0.01);
+        assert_eq!(c.gamma, 1e-4);
+        assert_eq!(c.power, 0.75);
+        assert_eq!(c.e_max, 1e-4);
+        assert_eq!(c.r_max, 1e-4);
+    }
+
+    #[test]
+    fn lr_schedule_matches_formula() {
+        let c = ExperimentConfig::default();
+        assert!((c.lr_at(0) - 0.01).abs() < 1e-12);
+        let lr10k = 0.01 * (1.0f64 + 1e-4 * 10_000.0).powf(-0.75);
+        assert!((c.lr_at(10_000) - lr10k).abs() < 1e-12);
+        assert!(c.lr_at(10_000) < c.lr_at(0));
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = toml::parse(
+            r#"
+            scheme = "na"
+            iters = 100
+            [policy]
+            e_max = 0.5
+            init_weights = [8, 8]
+            agg = "max"
+            "#,
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.scheme, "na");
+        assert_eq!(c.iters, 100);
+        assert_eq!(c.e_max, 0.5);
+        assert_eq!(c.init_weights, Format::new(8, 8));
+        assert_eq!(c.agg, AggMode::Max);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = ExperimentConfig::default();
+        c.apply_set("scheme=\"float\"").unwrap();
+        c.apply_set("iters = 7").unwrap();
+        c.apply_set("init_acts = [3, 5]").unwrap();
+        assert_eq!(c.scheme, "float");
+        assert_eq!(c.iters, 7);
+        assert_eq!(c.init_acts, Format::new(3, 5));
+        assert!(c.apply_set("bogus=1").is_err());
+        assert!(c.apply_set("no_equals").is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! Minimal TOML-subset parser (the `toml` crate is unavailable offline).
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / bool / homogeneous scalar arrays, `#` comments, blank lines.
+//! This covers the whole config surface of the repo; nested tables and
+//! datetimes are intentionally out of scope and rejected loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value`; keys before any section live under `""`.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            if name.contains('[') || name.contains('.') {
+                bail!("line {}: nested tables unsupported", lineno + 1);
+            }
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected 'key = value'", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {}", lineno + 1, e))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("missing value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(TomlValue::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            bail!("unterminated array");
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = split_array(inner)?
+            .into_iter()
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(v) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(v));
+        }
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+fn split_array(s: &str) -> Result<Vec<&str>> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    Ok(out)
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::new();
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match it.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => bail!("bad escape \\{other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_typical_config() {
+        let doc = parse(
+            r#"
+            # experiment
+            scheme = "qedps"
+            iters = 3000
+            [policy]
+            e_max = 1e-4
+            init = [2, 14]   # IL, FL
+            stochastic = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["scheme"].as_str(), Some("qedps"));
+        assert_eq!(doc[""]["iters"].as_i64(), Some(3000));
+        assert_eq!(doc["policy"]["e_max"].as_f64(), Some(1e-4));
+        assert_eq!(doc["policy"]["stochastic"].as_bool(), Some(true));
+        match &doc["policy"]["init"] {
+            TomlValue::Arr(v) => assert_eq!(v.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let doc = parse(r##"path = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc[""]["path"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse("a = 3\nb = 3.5\nc = 1_000").unwrap();
+        assert_eq!(doc[""]["a"], TomlValue::Int(3));
+        assert_eq!(doc[""]["b"], TomlValue::Float(3.5));
+        assert_eq!(doc[""]["c"], TomlValue::Int(1000));
+        assert_eq!(doc[""]["a"].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(parse("[open").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("= 3").is_err());
+        assert!(parse("x = [1, 2").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+        assert!(parse("[a.b]").is_err());
+        assert!(parse("just a line").is_err());
+    }
+
+    #[test]
+    fn escapes() {
+        let doc = parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc[""]["s"].as_str(), Some("a\nb\t\"c\""));
+    }
+}

@@ -1,0 +1,190 @@
+//! Figure/table regeneration drivers (one per paper artifact — DESIGN §3).
+//!
+//! Every driver writes CSV series under `cfg.out_dir` and prints an ASCII
+//! rendition so a terminal run shows the *shape* the paper reports.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::macsim::{self, MacUnit};
+use crate::metrics::History;
+use crate::policy::PrecState;
+use crate::runtime::Runtime;
+
+/// **Figure 3**: bit-width trajectories (weights & activations) for the
+/// qedps run vs the 32-bit baseline.  Reuses the Fig-4 qedps run.
+pub fn fig3(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<History> {
+    let mut c = cfg.clone();
+    c.scheme = "qedps".into();
+    let hist = super::run_and_record(rt, &c, &format!("fig3_{}", c.model))?;
+    println!("\nFigure 3 — bit-width over training (weights / activations / grads)");
+    ascii_series(
+        &hist
+            .train
+            .iter()
+            .map(|r| (r.iter as f64, r.prec.weights.bits() as f64))
+            .collect::<Vec<_>>(),
+        "weights bits",
+        32.0,
+    );
+    ascii_series(
+        &hist
+            .train
+            .iter()
+            .map(|r| (r.iter as f64, r.prec.acts.bits() as f64))
+            .collect::<Vec<_>>(),
+        "activations bits",
+        32.0,
+    );
+    let s = hist.summary();
+    println!(
+        "mean bits: weights={:.1} acts={:.1} grads={:.1}  (paper: ~16 / ~14 / near-full)",
+        s.mean_weight_bits, s.mean_act_bits, s.mean_grad_bits
+    );
+    Ok(hist)
+}
+
+/// **Figure 4**: accuracy curves — DPS vs float32 vs fixed-13-bit.
+pub fn fig4(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<Vec<(String, History)>> {
+    let mut out = Vec::new();
+    for scheme in ["qedps", "float", "fixed13"] {
+        let mut c = cfg.clone();
+        c.scheme = scheme.into();
+        let hist = super::run_and_record(rt, &c, &format!("fig4_{}_{scheme}", c.model))?;
+        out.push((scheme.to_string(), hist));
+    }
+    println!("\nFigure 4 — test accuracy: DPS vs float vs fixed-13");
+    for (scheme, hist) in &out {
+        let series: Vec<(f64, f64)> = hist
+            .eval
+            .iter()
+            .map(|e| (e.iter as f64, e.test_acc as f64))
+            .collect();
+        ascii_series(&series, &format!("{scheme} test acc"), 1.0);
+        let s = hist.summary();
+        println!("  {scheme}: final={:.4} best={:.4}", s.final_test_acc, s.best_test_acc);
+    }
+    Ok(out)
+}
+
+/// Eq.1-vs-Eq.2 A/B (Gupta's stochastic-vs-nearest comparison): identical
+/// policy and workload, only the rounding artifact differs.
+///
+/// Run at an aggressively narrow *fixed* format — Gupta et al.'s result is
+/// that nearest-rounding's bias (small gradient updates rounding to zero)
+/// only bites when the fraction is short; at 20+ bits both round the same.
+pub fn rounding_ab(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<()> {
+    use crate::fixedpoint::Format;
+    let mut rows = Vec::new();
+    for tag in ["stochastic", "nearest"] {
+        let mut c = cfg.clone();
+        c.scheme = "fixed".into();
+        c.init_weights = Format::new(2, 12);
+        c.init_acts = Format::new(4, 10);
+        c.init_grads = Format::new(2, 12);
+        c.force_rounding = Some(tag.into());
+        let hist = super::run_and_record(rt, &c, &format!("roundab_{}_{tag}", c.model))?;
+        rows.push((tag, hist.summary()));
+    }
+    println!("\nRounding A/B (Eq.2 stochastic vs Eq.1 nearest):");
+    for (tag, s) in rows {
+        println!(
+            "  {tag:<11} final_acc={:.4} best={:.4} loss={:.4}",
+            s.final_test_acc, s.best_test_acc, s.final_train_loss
+        );
+    }
+    Ok(())
+}
+
+/// §6 hardware-speedup claim: measured bit trajectory → MAC-sim cycles.
+pub fn history_speedup(rt: &Runtime, model: &str, hist: &History) -> Result<f64> {
+    let layers = model_layers(rt, model)?;
+    let unit = MacUnit::default();
+    let traj: Vec<PrecState> = hist.train.iter().map(|r| r.prec).collect();
+    if traj.is_empty() {
+        return Ok(1.0);
+    }
+    Ok(macsim::trajectory_speedup(&unit, &layers, &traj))
+}
+
+/// MAC-count layer model from the manifest metadata.
+pub fn model_layers(rt: &Runtime, model: &str) -> Result<Vec<macsim::LayerCost>> {
+    let meta = rt.manifest.model(model)?;
+    let params: Vec<(&str, Vec<usize>)> = meta
+        .params
+        .iter()
+        .map(|p| (p.name.as_str(), p.shape.clone()))
+        .collect();
+    let hw = if meta.input_shape.len() >= 2 {
+        (meta.input_shape[0], meta.input_shape[1])
+    } else {
+        (1, 1)
+    };
+    Ok(macsim::layer_costs(&params, hw, rt.manifest.train_batch))
+}
+
+/// Standalone MAC-sim report (no training): speedup vs word length table +
+/// per-layer costs.
+pub fn macsim_report(rt: &Runtime, model: &str) -> Result<()> {
+    let layers = model_layers(rt, model)?;
+    let unit = MacUnit::default();
+    println!("\nFlexible-MAC model — {model} @ batch {}", rt.manifest.train_batch);
+    println!("{:<10} {:>14}", "layer", "MACs/fwd");
+    for l in &layers {
+        println!("{:<10} {:>14}", l.name, l.macs);
+    }
+    println!("\n{:>6} {:>12} {:>10}", "bits", "cyc/iter", "speedup");
+    for bits in [32, 24, 20, 16, 14, 12, 8, 4] {
+        let p = PrecState::uniform(crate::fixedpoint::Format::new(bits / 2, bits - bits / 2));
+        let cyc = macsim::iteration_cycles(&unit, &layers, &p);
+        let base = macsim::iteration_cycles(
+            &unit,
+            &layers,
+            &PrecState::uniform(crate::fixedpoint::Format::new(16, 16)),
+        );
+        println!("{bits:>6} {cyc:>12} {:>9.2}x", base as f64 / cyc as f64);
+    }
+    Ok(())
+}
+
+/// Plain-terminal line plot: `series` = (x, y) pairs.
+pub fn ascii_series(series: &[(f64, f64)], label: &str, ymax_hint: f64) {
+    if series.is_empty() {
+        println!("  [{label}: no data]");
+        return;
+    }
+    const W: usize = 72;
+    const H: usize = 12;
+    let xmax = series.last().unwrap().0.max(1.0);
+    let ymax = series
+        .iter()
+        .map(|&(_, y)| y)
+        .fold(0.0f64, f64::max)
+        .max(ymax_hint * 0.25);
+    let mut grid = vec![vec![b' '; W]; H];
+    for &(x, y) in series {
+        let col = ((x / xmax) * (W - 1) as f64).round() as usize;
+        let row = if y.is_finite() {
+            ((y / ymax) * (H - 1) as f64).round() as usize
+        } else {
+            continue;
+        };
+        let row = (H - 1).saturating_sub(row.min(H - 1));
+        grid[row][col.min(W - 1)] = b'*';
+    }
+    println!("  {label} (y: 0..{ymax:.1}, x: 0..{xmax:.0})");
+    for row in grid {
+        println!("  |{}", String::from_utf8_lossy(&row));
+    }
+    println!("  +{}", "-".repeat(W));
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ascii_series_handles_degenerate() {
+        super::ascii_series(&[], "empty", 1.0);
+        super::ascii_series(&[(0.0, 0.0)], "single", 1.0);
+        super::ascii_series(&[(0.0, f64::NAN), (1.0, 1.0)], "nan", 1.0);
+    }
+}

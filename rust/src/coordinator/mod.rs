@@ -1,0 +1,112 @@
+//! Experiment drivers: everything `repro <cmd>` runs to regenerate the
+//! paper's figures and tables (DESIGN.md §3 experiment index).
+
+pub mod figures;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::metrics::History;
+use crate::runtime::Runtime;
+use crate::trainer::run_experiment;
+use crate::util::json::Json;
+
+/// Run one configured experiment, write its CSV/JSON records, return the
+/// history.
+pub fn run_and_record(rt: &mut Runtime, cfg: &ExperimentConfig, tag: &str) -> Result<History> {
+    let hist = run_experiment(rt, cfg)?;
+    let dir = std::path::Path::new(&cfg.out_dir);
+    std::fs::create_dir_all(dir)?;
+    hist.write_train_csv(dir.join(format!("{tag}_train.csv")))?;
+    hist.write_eval_csv(dir.join(format!("{tag}_eval.csv")))?;
+    std::fs::write(
+        dir.join(format!("{tag}_summary.json")),
+        hist.summary_json().to_string_pretty(),
+    )?;
+    let s = hist.summary();
+    crate::log_info!(
+        "{tag}: final_acc={:.4} best_acc={:.4} mean_bits w={:.1} a={:.1} g={:.1}",
+        s.final_test_acc, s.best_test_acc,
+        s.mean_weight_bits, s.mean_act_bits, s.mean_grad_bits
+    );
+    Ok(hist)
+}
+
+/// Scheme-comparison row (Table 1 head-to-head).
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub scheme: String,
+    pub final_acc: f32,
+    pub best_acc: f32,
+    pub mean_w_bits: f64,
+    pub mean_a_bits: f64,
+    pub mean_g_bits: f64,
+    pub converged: bool,
+    pub hw_speedup: f64,
+}
+
+/// Run every scheme on the same workload (Table 1) and compute the MAC-sim
+/// speedup of each measured trajectory.
+pub fn compare_schemes(
+    rt: &mut Runtime,
+    base: &ExperimentConfig,
+    schemes: &[&str],
+) -> Result<Vec<CompareRow>> {
+    let mut rows = Vec::new();
+    for scheme in schemes {
+        let mut cfg = base.clone();
+        cfg.scheme = scheme.to_string();
+        let hist = run_and_record(rt, &cfg, &format!("compare_{}_{}", cfg.model, scheme))?;
+        let s = hist.summary();
+        let speedup = figures::history_speedup(rt, &cfg.model, &hist)?;
+        rows.push(CompareRow {
+            scheme: scheme.to_string(),
+            final_acc: s.final_test_acc,
+            best_acc: s.best_test_acc,
+            mean_w_bits: s.mean_weight_bits,
+            mean_a_bits: s.mean_act_bits,
+            mean_g_bits: s.mean_grad_bits,
+            // "converged" = ends well, not merely "passed through a good
+            // state" (fixed-13 famously peaks then collapses — paper §5).
+            converged: s.final_train_loss.is_finite() && s.final_test_acc > 0.5,
+            hw_speedup: speedup,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print_compare_table(rows: &[CompareRow]) {
+    println!(
+        "\n{:<13} {:>9} {:>9} {:>8} {:>8} {:>8} {:>10} {:>9}",
+        "scheme", "final_acc", "best_acc", "w_bits", "a_bits", "g_bits",
+        "converged", "hw_speed"
+    );
+    println!("{}", "-".repeat(82));
+    for r in rows {
+        println!(
+            "{:<13} {:>9.4} {:>9.4} {:>8.1} {:>8.1} {:>8.1} {:>10} {:>8.2}x",
+            r.scheme, r.final_acc, r.best_acc, r.mean_w_bits, r.mean_a_bits,
+            r.mean_g_bits, if r.converged { "yes" } else { "NO" }, r.hw_speedup
+        );
+    }
+    println!();
+}
+
+pub fn compare_rows_json(rows: &[CompareRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("scheme", Json::Str(r.scheme.clone())),
+                    ("final_acc", Json::Num(r.final_acc as f64)),
+                    ("best_acc", Json::Num(r.best_acc as f64)),
+                    ("mean_w_bits", Json::Num(r.mean_w_bits)),
+                    ("mean_a_bits", Json::Num(r.mean_a_bits)),
+                    ("mean_g_bits", Json::Num(r.mean_g_bits)),
+                    ("converged", Json::Bool(r.converged)),
+                    ("hw_speedup", Json::Num(r.hw_speedup)),
+                ])
+            })
+            .collect(),
+    )
+}

@@ -1,0 +1,163 @@
+//! Shuffled mini-batch iterator over a [`Dataset`].
+//!
+//! Epoch semantics match Caffe's data layer: a fresh permutation each
+//! epoch, batches wrap across the epoch boundary so every batch has the
+//! configured size.  Writes pixels/labels into caller-provided buffers so
+//! the training hot loop performs no per-step allocation.
+
+use super::{Dataset, IMG_PIXELS};
+use crate::util::rng::Pcg32;
+
+pub struct Batcher<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    order: Vec<u32>,
+    pos: usize,
+    rng: Pcg32,
+    pub epochs: u64,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize, seed: u64) -> Self {
+        assert!(batch > 0 && ds.n > 0);
+        let mut rng = Pcg32::seeded(seed);
+        let mut order: Vec<u32> = (0..ds.n as u32).collect();
+        rng.shuffle(&mut order);
+        Self { ds, batch, order, pos: 0, rng, epochs: 0 }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Fill `x` (batch * IMG_PIXELS) and `y` (batch) with the next batch.
+    pub fn next_into(&mut self, x: &mut [f32], y: &mut [i32]) {
+        assert_eq!(x.len(), self.batch * IMG_PIXELS);
+        assert_eq!(y.len(), self.batch);
+        for b in 0..self.batch {
+            if self.pos == self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.pos = 0;
+                self.epochs += 1;
+            }
+            let idx = self.order[self.pos] as usize;
+            self.pos += 1;
+            x[b * IMG_PIXELS..(b + 1) * IMG_PIXELS]
+                .copy_from_slice(self.ds.image(idx));
+            y[b] = self.ds.labels[idx] as i32;
+        }
+    }
+
+    /// Allocating convenience wrapper (tests, not the hot loop).
+    pub fn next_batch(&mut self) -> (Vec<f32>, Vec<i32>) {
+        let mut x = vec![0.0; self.batch * IMG_PIXELS];
+        let mut y = vec![0; self.batch];
+        self.next_into(&mut x, &mut y);
+        (x, y)
+    }
+}
+
+/// Deterministic sequential batches over a test set (no shuffle, exact
+/// coverage; the tail batch is padded by wrapping to keep shapes static —
+/// callers pass `valid` to weight the padded entries out).
+pub struct EvalBatcher<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> EvalBatcher<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize) -> Self {
+        Self { ds, batch, pos: 0 }
+    }
+
+    /// Number of batches covering the whole set.
+    pub fn num_batches(&self) -> usize {
+        self.ds.n.div_ceil(self.batch)
+    }
+
+    /// Fill the next batch; returns how many entries are valid (non-pad),
+    /// or `None` when the set is exhausted.
+    pub fn next_into(&mut self, x: &mut [f32], y: &mut [i32]) -> Option<usize> {
+        if self.pos >= self.ds.n {
+            return None;
+        }
+        let valid = (self.ds.n - self.pos).min(self.batch);
+        for b in 0..self.batch {
+            let idx = if b < valid { self.pos + b } else { (self.pos + b) % self.ds.n };
+            x[b * IMG_PIXELS..(b + 1) * IMG_PIXELS]
+                .copy_from_slice(self.ds.image(idx));
+            y[b] = self.ds.labels[idx] as i32;
+        }
+        self.pos += valid;
+        Some(valid)
+    }
+
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn covers_dataset_each_epoch() {
+        let ds = synth::generate(100, 1);
+        let mut b = Batcher::new(&ds, 10, 42);
+        let mut seen = vec![0u32; 10];
+        for _ in 0..10 {
+            let (_, y) = b.next_batch();
+            for l in y {
+                seen[l as usize] += 1;
+            }
+        }
+        assert_eq!(b.epochs, 0);
+        // balanced dataset => exactly 10 of each class per epoch
+        assert!(seen.iter().all(|&c| c == 10), "{seen:?}");
+        b.next_batch();
+        assert_eq!(b.epochs, 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = synth::generate(64, 2);
+        let mut a = Batcher::new(&ds, 16, 7);
+        let mut b = Batcher::new(&ds, 16, 7);
+        for _ in 0..8 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+    }
+
+    #[test]
+    fn wraps_across_epoch() {
+        let ds = synth::generate(10, 3);
+        let mut b = Batcher::new(&ds, 4, 1);
+        for _ in 0..5 {
+            b.next_batch(); // 20 samples from a 10-sample set
+        }
+        assert_eq!(b.epochs, 1);
+    }
+
+    #[test]
+    fn eval_covers_exactly_once() {
+        let ds = synth::generate(25, 4);
+        let mut e = EvalBatcher::new(&ds, 10);
+        assert_eq!(e.num_batches(), 3);
+        let mut x = vec![0.0; 10 * IMG_PIXELS];
+        let mut y = vec![0; 10];
+        let mut total = 0;
+        let mut batches = 0;
+        while let Some(v) = e.next_into(&mut x, &mut y) {
+            total += v;
+            batches += 1;
+        }
+        assert_eq!(total, 25);
+        assert_eq!(batches, 3);
+        assert!(e.next_into(&mut x, &mut y).is_none());
+        e.reset();
+        assert_eq!(e.next_into(&mut x, &mut y), Some(10));
+    }
+}

@@ -1,0 +1,173 @@
+//! MNIST IDX file-format loader (LeCun's original binary layout), with
+//! transparent `.gz` support via flate2.
+//!
+//! IDX format: big-endian magic (2 zero bytes, type code, ndim), then one
+//! u32 per dimension, then raw data.  Images are `0x08` (u8) with 3 dims
+//! `(n, 28, 28)`; labels are `0x08` with 1 dim.
+
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::{Dataset, IMG_SIDE};
+
+fn read_maybe_gz(path: &Path) -> Result<Vec<u8>> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if raw.len() >= 2 && raw[0] == 0x1f && raw[1] == 0x8b {
+        let mut out = Vec::new();
+        flate2::read::GzDecoder::new(&raw[..])
+            .read_to_end(&mut out)
+            .with_context(|| format!("gunzip {path:?}"))?;
+        Ok(out)
+    } else {
+        Ok(raw)
+    }
+}
+
+fn be_u32(b: &[u8], off: usize) -> Result<u32> {
+    if off + 4 > b.len() {
+        bail!("idx: truncated header");
+    }
+    Ok(u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]]))
+}
+
+/// Parse an IDX byte buffer into (dims, data).
+pub fn parse_idx(buf: &[u8]) -> Result<(Vec<usize>, &[u8])> {
+    if buf.len() < 4 || buf[0] != 0 || buf[1] != 0 {
+        bail!("idx: bad magic");
+    }
+    if buf[2] != 0x08 {
+        bail!("idx: only u8 data supported (type 0x{:02x})", buf[2]);
+    }
+    let ndim = buf[3] as usize;
+    let mut dims = Vec::with_capacity(ndim);
+    for d in 0..ndim {
+        dims.push(be_u32(buf, 4 + 4 * d)? as usize);
+    }
+    let start = 4 + 4 * ndim;
+    let total: usize = dims.iter().product();
+    if buf.len() < start + total {
+        bail!("idx: truncated data ({} < {})", buf.len() - start, total);
+    }
+    Ok((dims, &buf[start..start + total]))
+}
+
+fn load_images(path: &Path) -> Result<Vec<f32>> {
+    let buf = read_maybe_gz(path)?;
+    let (dims, data) = parse_idx(&buf)?;
+    if dims.len() != 3 || dims[1] != IMG_SIDE || dims[2] != IMG_SIDE {
+        bail!("idx: expected (n,28,28) images, got {dims:?}");
+    }
+    Ok(data.iter().map(|&b| b as f32 / 255.0).collect())
+}
+
+fn load_labels(path: &Path) -> Result<Vec<u8>> {
+    let buf = read_maybe_gz(path)?;
+    let (dims, data) = parse_idx(&buf)?;
+    if dims.len() != 1 {
+        bail!("idx: expected 1-d labels, got {dims:?}");
+    }
+    Ok(data.to_vec())
+}
+
+fn find(dir: &Path, names: &[&str]) -> Result<PathBuf> {
+    for n in names {
+        for ext in ["", ".gz"] {
+            let p = dir.join(format!("{n}{ext}"));
+            if p.exists() {
+                return Ok(p);
+            }
+        }
+    }
+    bail!("none of {names:?} found in {dir:?}")
+}
+
+/// Load the canonical 4-file train/test pair from a directory.
+pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<(Dataset, Dataset)> {
+    let dir = dir.as_ref();
+    let tr_x = load_images(&find(dir, &["train-images-idx3-ubyte", "train-images.idx3-ubyte"])?)?;
+    let tr_y = load_labels(&find(dir, &["train-labels-idx1-ubyte", "train-labels.idx1-ubyte"])?)?;
+    let te_x = load_images(&find(dir, &["t10k-images-idx3-ubyte", "t10k-images.idx3-ubyte"])?)?;
+    let te_y = load_labels(&find(dir, &["t10k-labels-idx1-ubyte", "t10k-labels.idx1-ubyte"])?)?;
+    Ok((Dataset::new(tr_x, tr_y), Dataset::new(te_x, te_y)))
+}
+
+/// Serialize a dataset back to IDX (used by tests and `repro gen-data`).
+pub fn write_idx_images(path: &Path, ds: &Dataset) -> Result<()> {
+    let mut out = vec![0u8, 0, 0x08, 3];
+    out.extend((ds.n as u32).to_be_bytes());
+    out.extend((IMG_SIDE as u32).to_be_bytes());
+    out.extend((IMG_SIDE as u32).to_be_bytes());
+    out.extend(ds.images.iter().map(|&f| (f * 255.0).round().clamp(0.0, 255.0) as u8));
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+pub fn write_idx_labels(path: &Path, ds: &Dataset) -> Result<()> {
+    let mut out = vec![0u8, 0, 0x08, 1];
+    out.extend((ds.n as u32).to_be_bytes());
+    out.extend_from_slice(&ds.labels);
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_idx(&[]).is_err());
+        assert!(parse_idx(&[1, 2, 3, 4]).is_err());
+        assert!(parse_idx(&[0, 0, 0x09, 1, 0, 0, 0, 1, 7]).is_err()); // type
+        assert!(parse_idx(&[0, 0, 0x08, 1, 0, 0, 0, 9, 1]).is_err()); // short
+    }
+
+    #[test]
+    fn parse_minimal() {
+        let buf = [0, 0, 0x08, 1, 0, 0, 0, 3, 10, 20, 30];
+        let (dims, data) = parse_idx(&buf).unwrap();
+        assert_eq!(dims, vec![3]);
+        assert_eq!(data, &[10, 20, 30]);
+    }
+
+    #[test]
+    fn roundtrip_via_files() {
+        let ds = synth::generate(32, 7);
+        let dir = std::env::temp_dir().join("qedps_mnist_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_idx_images(&dir.join("train-images-idx3-ubyte"), &ds).unwrap();
+        write_idx_labels(&dir.join("train-labels-idx1-ubyte"), &ds).unwrap();
+        write_idx_images(&dir.join("t10k-images-idx3-ubyte"), &ds).unwrap();
+        write_idx_labels(&dir.join("t10k-labels-idx1-ubyte"), &ds).unwrap();
+        let (train, test) = load_dir(&dir).unwrap();
+        assert_eq!(train.n, 32);
+        assert_eq!(test.labels, ds.labels);
+        // u8 quantization: within half a step
+        for (a, b) in train.images.iter().zip(&ds.images) {
+            assert!((a - b).abs() <= 0.5 / 255.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn gz_transparent() {
+        use std::io::Write;
+        let ds = synth::generate(4, 9);
+        let dir = std::env::temp_dir().join("qedps_mnist_gz");
+        std::fs::create_dir_all(&dir).unwrap();
+        let plain = dir.join("labels.idx");
+        write_idx_labels(&plain, &ds).unwrap();
+        let raw = std::fs::read(&plain).unwrap();
+        let gz_path = dir.join("labels.idx.gz");
+        let mut enc = flate2::write::GzEncoder::new(
+            std::fs::File::create(&gz_path).unwrap(),
+            flate2::Compression::default(),
+        );
+        enc.write_all(&raw).unwrap();
+        enc.finish().unwrap();
+        let via_gz = read_maybe_gz(&gz_path).unwrap();
+        assert_eq!(via_gz, raw);
+    }
+}

@@ -1,0 +1,91 @@
+//! Data pipeline: dataset container, MNIST IDX(+gz) loader, offline
+//! synthetic-digit substitute, and the shuffling batcher.
+//!
+//! Resolution order (see [`load_default`]): real MNIST from `$MNIST_DIR`
+//! (or `./data/mnist`) when the IDX files exist, otherwise the synthetic
+//! generator (DESIGN.md substitution #2 — this environment is offline).
+
+pub mod batcher;
+pub mod mnist;
+pub mod synth;
+
+pub use batcher::Batcher;
+
+pub const IMG_SIDE: usize = 28;
+pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+pub const NUM_CLASSES: usize = 10;
+
+/// An in-memory image-classification dataset (f32 pixels in `[0, 1]`).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Row-major `n * IMG_PIXELS`.
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+    pub n: usize,
+}
+
+impl Dataset {
+    pub fn new(images: Vec<f32>, labels: Vec<u8>) -> Self {
+        assert_eq!(images.len(), labels.len() * IMG_PIXELS);
+        let n = labels.len();
+        Self { images, labels, n }
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * IMG_PIXELS..(i + 1) * IMG_PIXELS]
+    }
+
+    /// Class histogram (useful for sanity checks and tests).
+    pub fn class_counts(&self) -> [usize; NUM_CLASSES] {
+        let mut c = [0; NUM_CLASSES];
+        for &l in &self.labels {
+            c[l as usize] += 1;
+        }
+        c
+    }
+}
+
+/// Where a dataset came from (logged into experiment records).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Source {
+    Mnist(String),
+    Synthetic { seed: u64 },
+}
+
+/// Load train/test sets: real MNIST if present, synthetic otherwise.
+pub fn load_default(train_n: usize, test_n: usize) -> (Dataset, Dataset, Source) {
+    let dir = std::env::var("MNIST_DIR").unwrap_or_else(|_| "data/mnist".into());
+    if let Ok(pair) = mnist::load_dir(&dir) {
+        crate::log_info!("data: using MNIST from {dir}");
+        return (pair.0, pair.1, Source::Mnist(dir));
+    }
+    let seed = 2018;
+    crate::log_info!(
+        "data: MNIST not found at {dir}; generating synthetic digits \
+         (train={train_n}, test={test_n}, seed={seed})"
+    );
+    let train = synth::generate(train_n, seed);
+    let test = synth::generate(test_n, seed + 1);
+    (train, test, Source::Synthetic { seed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_accessors() {
+        let ds = Dataset::new(vec![0.5; IMG_PIXELS * 3], vec![1, 2, 1]);
+        assert_eq!(ds.n, 3);
+        assert_eq!(ds.image(2).len(), IMG_PIXELS);
+        let c = ds.class_counts();
+        assert_eq!(c[1], 2);
+        assert_eq!(c[2], 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dataset_size_mismatch_panics() {
+        Dataset::new(vec![0.0; 10], vec![1, 2]);
+    }
+}

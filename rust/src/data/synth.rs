@@ -1,0 +1,262 @@
+//! Synthetic handwritten-digit generator — the offline MNIST substitute
+//! (DESIGN.md substitution #2).
+//!
+//! Each class is a stroke skeleton (polyline/arc control points in a unit
+//! box).  A sample applies a random affine jitter (rotation, anisotropic
+//! scale, shear, translation), renders the strokes with a random pen width
+//! via distance-to-segment antialiasing, then adds mild pixel noise — the
+//! same axes of variation that make MNIST non-trivial.  A LeNet float
+//! baseline reaches high-90s% accuracy; the relative behaviour of the
+//! precision schemes (which is what the paper's figures compare) carries
+//! over.
+
+use crate::util::rng::Pcg32;
+
+use super::{Dataset, IMG_PIXELS, IMG_SIDE};
+
+type Pt = (f32, f32);
+
+/// Sample an arc as a polyline. Angles in turns (1.0 = full circle).
+fn arc(cx: f32, cy: f32, rx: f32, ry: f32, a0: f32, a1: f32, n: usize) -> Vec<Pt> {
+    (0..=n)
+        .map(|i| {
+            let t = a0 + (a1 - a0) * i as f32 / n as f32;
+            let rad = t * std::f32::consts::TAU;
+            (cx + rx * rad.cos(), cy - ry * rad.sin())
+        })
+        .collect()
+}
+
+/// Stroke skeletons per digit, in a [0,1]^2 box (y grows downward).
+fn skeleton(digit: u8) -> Vec<Vec<Pt>> {
+    match digit {
+        0 => vec![arc(0.5, 0.5, 0.32, 0.42, 0.0, 1.0, 24)],
+        1 => vec![vec![(0.35, 0.25), (0.55, 0.08), (0.55, 0.92)]],
+        2 => vec![{
+            let mut s = arc(0.5, 0.28, 0.26, 0.2, 0.5, -0.08, 12);
+            s.extend([(0.22, 0.9), (0.8, 0.9)]);
+            s
+        }],
+        3 => vec![
+            arc(0.45, 0.28, 0.26, 0.2, 0.55, -0.25, 12),
+            arc(0.45, 0.7, 0.3, 0.22, 0.25, -0.55, 12),
+        ],
+        4 => vec![
+            vec![(0.62, 0.08), (0.18, 0.62), (0.85, 0.62)],
+            vec![(0.62, 0.3), (0.62, 0.95)],
+        ],
+        5 => vec![{
+            let mut s = vec![(0.75, 0.1), (0.3, 0.1), (0.27, 0.45)];
+            s.extend(arc(0.48, 0.68, 0.28, 0.24, 0.3, -0.45, 14));
+            s
+        }],
+        6 => vec![{
+            let mut s = arc(0.52, 0.3, 0.3, 0.26, 0.45, 0.25, 8);
+            s.extend(arc(0.5, 0.68, 0.26, 0.24, 0.25, -0.75, 16));
+            s
+        }],
+        7 => vec![vec![(0.2, 0.12), (0.8, 0.12), (0.42, 0.92)]],
+        8 => vec![
+            arc(0.5, 0.3, 0.24, 0.2, 0.0, 1.0, 16),
+            arc(0.5, 0.72, 0.28, 0.22, 0.0, 1.0, 16),
+        ],
+        9 => vec![
+            arc(0.52, 0.32, 0.26, 0.22, 0.0, 1.0, 16),
+            vec![(0.78, 0.32), (0.72, 0.92)],
+        ],
+        _ => panic!("digit out of range"),
+    }
+}
+
+struct Affine {
+    a: f32,
+    b: f32,
+    c: f32,
+    d: f32,
+    tx: f32,
+    ty: f32,
+}
+
+impl Affine {
+    fn random(rng: &mut Pcg32) -> Self {
+        let rot = (rng.next_f32() - 0.5) * 0.5; // +/- ~14 deg
+        let (sin, cos) = rot.sin_cos();
+        let sx = 0.75 + rng.next_f32() * 0.4;
+        let sy = 0.75 + rng.next_f32() * 0.4;
+        let shear = (rng.next_f32() - 0.5) * 0.35;
+        let tx = (rng.next_f32() - 0.5) * 0.2;
+        let ty = (rng.next_f32() - 0.5) * 0.16;
+        Self {
+            a: sx * cos,
+            b: -sy * sin + shear * cos,
+            c: sx * sin,
+            d: sy * cos + shear * sin,
+            tx,
+            ty,
+        }
+    }
+
+    fn apply(&self, p: Pt) -> Pt {
+        // transform about the glyph centre (0.5, 0.5)
+        let (x, y) = (p.0 - 0.5, p.1 - 0.5);
+        (
+            self.a * x + self.b * y + 0.5 + self.tx,
+            self.c * x + self.d * y + 0.5 + self.ty,
+        )
+    }
+}
+
+fn dist_to_segment(p: Pt, a: Pt, b: Pt) -> f32 {
+    let (vx, vy) = (b.0 - a.0, b.1 - a.1);
+    let (wx, wy) = (p.0 - a.0, p.1 - a.1);
+    let len2 = vx * vx + vy * vy;
+    let t = if len2 > 1e-12 {
+        ((wx * vx + wy * vy) / len2).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let (dx, dy) = (wx - t * vx, wy - t * vy);
+    (dx * dx + dy * dy).sqrt()
+}
+
+/// Render one digit into `out` (28*28, overwritten).
+pub fn render(digit: u8, rng: &mut Pcg32, out: &mut [f32]) {
+    assert_eq!(out.len(), IMG_PIXELS);
+    let aff = Affine::random(rng);
+    let strokes: Vec<Vec<Pt>> = skeleton(digit)
+        .into_iter()
+        .map(|s| s.into_iter().map(|p| aff.apply(p)).collect())
+        .collect();
+    let pen = 0.035 + rng.next_f32() * 0.03; // stroke radius in unit coords
+    let noise_amp = 0.04 + rng.next_f32() * 0.04;
+
+    // Collect segments once.
+    let mut segs: Vec<(Pt, Pt)> = Vec::new();
+    for s in &strokes {
+        for w in s.windows(2) {
+            segs.push((w[0], w[1]));
+        }
+    }
+
+    for py in 0..IMG_SIDE {
+        for px in 0..IMG_SIDE {
+            // pixel centre in unit coords (2px margin like MNIST's frame)
+            let fx = (px as f32 + 0.5) / IMG_SIDE as f32;
+            let fy = (py as f32 + 0.5) / IMG_SIDE as f32;
+            let mut d = f32::INFINITY;
+            for &(a, b) in &segs {
+                d = d.min(dist_to_segment((fx, fy), a, b));
+                if d < 1e-4 {
+                    break;
+                }
+            }
+            // soft pen edge: full ink inside radius, ~1.5px falloff
+            let edge = 1.5 / IMG_SIDE as f32;
+            let ink = ((pen + edge - d) / edge).clamp(0.0, 1.0);
+            let noise = (rng.next_f32() - 0.5) * noise_amp;
+            out[py * IMG_SIDE + px] = (ink + noise * ink.max(0.1)).clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// Generate a balanced, shuffled dataset of `n` samples.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::seeded(seed);
+    let mut labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+    rng.shuffle(&mut labels);
+    let mut images = vec![0.0f32; n * IMG_PIXELS];
+    for (i, &l) in labels.iter().enumerate() {
+        render(l, &mut rng, &mut images[i * IMG_PIXELS..(i + 1) * IMG_PIXELS]);
+    }
+    Dataset::new(images, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_and_deterministic() {
+        let a = generate(200, 3);
+        let b = generate(200, 3);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images, b.images);
+        for c in a.class_counts() {
+            assert_eq!(c, 20);
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = generate(50, 1);
+        let b = generate(50, 2);
+        assert_ne!(a.images, b.images);
+    }
+
+    #[test]
+    fn pixels_in_range_with_ink() {
+        let ds = generate(100, 5);
+        let mut ink = 0.0;
+        for &p in &ds.images {
+            assert!((0.0..=1.0).contains(&p));
+            ink += p as f64;
+        }
+        let mean = ink / ds.images.len() as f64;
+        // digits cover roughly 10-30% of the frame
+        assert!((0.03..0.4).contains(&mean), "mean ink {mean}");
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Nearest-centroid self-classification must beat chance by a lot —
+        // a weak but implementation-independent signal that the generator
+        // produces learnable classes.
+        let train = generate(500, 11);
+        let test = generate(200, 12);
+        let mut centroids = vec![vec![0.0f64; IMG_PIXELS]; 10];
+        let counts = train.class_counts();
+        for i in 0..train.n {
+            let l = train.labels[i] as usize;
+            for (c, &p) in centroids[l].iter_mut().zip(train.image(i)) {
+                *c += p as f64;
+            }
+        }
+        for (c, n) in centroids.iter_mut().zip(counts) {
+            for v in c.iter_mut() {
+                *v /= n as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.n {
+            let img = test.image(i);
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f64 = centroids[a]
+                        .iter()
+                        .zip(img)
+                        .map(|(c, &p)| (c - p as f64).powi(2))
+                        .sum();
+                    let db: f64 = centroids[b]
+                        .iter()
+                        .zip(img)
+                        .map(|(c, &p)| (c - p as f64).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            correct += (best == test.labels[i] as usize) as usize;
+        }
+        let acc = correct as f64 / test.n as f64;
+        assert!(acc > 0.6, "nearest-centroid acc {acc} too low");
+    }
+
+    #[test]
+    fn every_digit_renders() {
+        let mut rng = Pcg32::seeded(1);
+        let mut buf = vec![0.0; IMG_PIXELS];
+        for d in 0..10 {
+            render(d, &mut rng, &mut buf);
+            assert!(buf.iter().sum::<f32>() > 5.0, "digit {d} blank");
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! The dynamic fixed-point format `<IL, FL>`.
+//!
+//! `IL` counts the integer bits *including sign* (Gupta et al.'s
+//! convention), `FL` the fractional bits; word length is `IL + FL`, step is
+//! `2^-FL` and the representable range is `[-2^(IL-1), 2^(IL-1) - 2^-FL]`
+//! (two's complement).
+
+use std::fmt;
+
+/// Bounds the controller may move within (DESIGN.md §4). IL >= 1 keeps the
+/// sign bit; 24 is where f32 emulation stops being exact, so we never go
+/// above it.
+pub const IL_RANGE: (i32, i32) = (1, 24);
+pub const FL_RANGE: (i32, i32) = (0, 24);
+
+/// Exact `2^e` for integer `e` in `[-126, 127]`, via the f32 exponent field
+/// — bit-identical to `kernels/quantize.py::exp2i`.
+#[inline]
+pub fn exp2i(e: i32) -> f32 {
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Format {
+    pub il: i32,
+    pub fl: i32,
+}
+
+impl Format {
+    pub const fn new(il: i32, fl: i32) -> Self {
+        Self { il, fl }
+    }
+
+    /// Clamp into the legal controller range.
+    pub fn clamped(self) -> Self {
+        Self {
+            il: self.il.clamp(IL_RANGE.0, IL_RANGE.1),
+            fl: self.fl.clamp(FL_RANGE.0, FL_RANGE.1),
+        }
+    }
+
+    /// Word length in bits (what the MAC unit pays for).
+    pub fn bits(&self) -> i32 {
+        self.il + self.fl
+    }
+
+    /// Quantization step `2^-FL`.
+    pub fn step(&self) -> f32 {
+        exp2i(-self.fl)
+    }
+
+    /// Largest representable value `2^(IL-1) - 2^-FL` (computed exactly as
+    /// the kernel does, including its f32 rounding at IL+FL > 24).
+    pub fn max_val(&self) -> f32 {
+        exp2i(self.il - 1) - self.step()
+    }
+
+    /// Most negative representable value `-2^(IL-1)`.
+    pub fn min_val(&self) -> f32 {
+        -exp2i(self.il - 1)
+    }
+
+    /// Whether `x` lies inside the representable range (the overflow
+    /// predicate of the R statistic).
+    pub fn contains(&self, x: f32) -> bool {
+        x >= self.min_val() && x <= self.max_val()
+    }
+
+    /// Integer-grid representation of an (on-grid, in-range) value.
+    pub fn to_bits(&self, x: f32) -> i64 {
+        (x as f64 * (1u64 << self.fl) as f64).round() as i64
+    }
+
+    /// Value of an integer-grid representation.
+    pub fn from_bits(&self, b: i64) -> f32 {
+        (b as f64 * exp2i(-self.fl) as f64) as f32
+    }
+
+    /// Grid bounds in integer representation.
+    pub fn bit_bounds(&self) -> (i64, i64) {
+        let hi = (1i64 << (self.bits() - 1)) - 1;
+        (-hi - 1, hi)
+    }
+}
+
+impl fmt::Display for Format {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "<{},{}>", self.il, self.fl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp2i_exact() {
+        for e in -126..=127 {
+            assert_eq!(exp2i(e), 2.0f32.powi(e), "e={e}");
+        }
+    }
+
+    #[test]
+    fn range_8_8() {
+        let f = Format::new(8, 8);
+        assert_eq!(f.bits(), 16);
+        assert_eq!(f.step(), 1.0 / 256.0);
+        assert_eq!(f.max_val(), 128.0 - 1.0 / 256.0);
+        assert_eq!(f.min_val(), -128.0);
+        assert!(f.contains(127.0));
+        assert!(!f.contains(128.0));
+        assert!(f.contains(-128.0));
+        assert!(!f.contains(-128.5));
+    }
+
+    #[test]
+    fn bit_roundtrip() {
+        let f = Format::new(4, 6);
+        for b in f.bit_bounds().0..=f.bit_bounds().1 {
+            assert_eq!(f.to_bits(f.from_bits(b)), b);
+        }
+    }
+
+    #[test]
+    fn bit_bounds_match_value_bounds() {
+        let f = Format::new(5, 3);
+        let (lo, hi) = f.bit_bounds();
+        assert_eq!(f.from_bits(lo), f.min_val());
+        assert_eq!(f.from_bits(hi), f.max_val());
+    }
+
+    #[test]
+    fn clamp() {
+        assert_eq!(Format::new(40, -3).clamped(), Format::new(24, 0));
+        assert_eq!(Format::new(0, 99).clamped(), Format::new(1, 24));
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Format::new(4, 9).to_string(), "<4,9>");
+    }
+}

@@ -1,0 +1,16 @@
+//! Software fixed-point substrate: the `<IL, FL>` format, a **bit-exact
+//! mirror** of the L1 Pallas quantizer, and integer fixed-point arithmetic
+//! (what the paper's flexible MAC unit executes).
+//!
+//! Three consumers:
+//! * `rust/tests/quantize_parity.rs` — asserts this mirror and the AOT HLO
+//!   artifact agree element-for-element (the cross-language spec check);
+//! * [`crate::policy`] unit tests — drive controllers with software stats;
+//! * [`crate::macsim`] — operand bit-widths and exact MAC semantics.
+
+pub mod arith;
+pub mod format;
+pub mod quantize;
+
+pub use format::Format;
+pub use quantize::{quantize_slice, quantize_slice_at, QuantStats, RoundMode};

@@ -1,0 +1,229 @@
+//! Bit-exact software mirror of the L1 Pallas quantizer.
+//!
+//! Every operation here reproduces `kernels/quantize.py::_quantize_block` in
+//! f32, in the same order: scale by the exact power of two, floor, exact
+//! residual, hash-noise comparison, clip, relative-error stat.  The parity
+//! test executes the AOT `quantize_*.hlo.txt` artifacts and asserts the
+//! quantized vectors agree **bit-for-bit** with this mirror.
+
+use super::format::{exp2i, Format};
+use crate::util::rng::uniform01;
+
+pub const EPS: f32 = 1e-8;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Paper Eq. 2 (Gupta et al.): round up with probability = residual.
+    Stochastic,
+    /// Paper Eq. 1: round-to-nearest, half-up.
+    Nearest,
+}
+
+/// Aggregate feedback statistics of one quantization pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct QuantStats {
+    /// Mean relative quantization error — the paper's `E`.
+    pub e: f32,
+    /// Overflow (saturation) rate — the paper's `R`.
+    pub r: f32,
+}
+
+/// Quantize one element given its rounding noise `u` (in `[0,1)`).
+///
+/// Returns `(q, overflowed)`.  `fmt` must already be clamped to the legal
+/// range (the slice entrypoint does this).
+#[inline]
+pub fn quantize_val(x: f32, u: f32, fmt: Format, mode: RoundMode) -> (f32, bool) {
+    let s = exp2i(fmt.fl);
+    let inv_s = exp2i(-fmt.fl);
+    let hi = exp2i(fmt.il - 1) - inv_s;
+    let lo = -exp2i(fmt.il - 1);
+    let xs = x * s;
+    let f = xs.floor();
+    let r = xs - f; // exact (Sterbenz)
+    let up = match mode {
+        RoundMode::Stochastic => r > u,
+        RoundMode::Nearest => r >= u,
+    };
+    let y = (f + up as u32 as f32) * inv_s;
+    let q = y.clamp(lo, hi);
+    let ovf = x < lo || x > hi;
+    (q, ovf)
+}
+
+/// Quantize a slice with the kernel's counter-hash noise stream.
+///
+/// `idx_base` is the global flat index of `x[0]` (the kernel numbers noise
+/// by flat element position, so a sub-slice of a larger tensor quantizes
+/// identically when given its true offset).
+pub fn quantize_slice_at(
+    x: &[f32],
+    idx_base: u32,
+    fmt: Format,
+    seed: i32,
+    mode: RoundMode,
+    out: &mut Vec<f32>,
+) -> QuantStats {
+    let fmt = fmt.clamped();
+    out.clear();
+    out.reserve(x.len());
+    // E is a ratio of means — sum|q-x| / (sum|x| + eps) — matching the
+    // kernel (per-element relative error is dominated by near-zero entries).
+    let mut esum = 0.0f64;
+    let mut xsum = 0.0f64;
+    let mut rsum = 0u64;
+    for (i, &v) in x.iter().enumerate() {
+        let u = match mode {
+            RoundMode::Stochastic => {
+                uniform01(idx_base.wrapping_add(i as u32), seed as u32)
+            }
+            RoundMode::Nearest => 0.5,
+        };
+        let (q, ovf) = quantize_val(v, u, fmt, mode);
+        esum += (q - v).abs() as f64;
+        xsum += v.abs() as f64;
+        rsum += ovf as u64;
+        out.push(q);
+    }
+    let n = x.len().max(1) as f64;
+    QuantStats {
+        e: (esum / (xsum + EPS as f64)) as f32,
+        r: (rsum as f64 / n) as f32,
+    }
+}
+
+/// Convenience wrapper allocating the output.
+pub fn quantize_slice(
+    x: &[f32],
+    fmt: Format,
+    seed: i32,
+    mode: RoundMode,
+) -> (Vec<f32>, QuantStats) {
+    let mut out = Vec::new();
+    let stats = quantize_slice_at(x, 0, fmt, seed, mode, &mut out);
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randvec(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn values_on_grid_and_in_range() {
+        let fmt = Format::new(4, 6);
+        let x = randvec(4096, 8.0, 1);
+        let (q, stats) = quantize_slice(&x, fmt, 7, RoundMode::Stochastic);
+        for &v in &q {
+            assert!((v * 64.0).fract() == 0.0, "off grid: {v}");
+            assert!(v >= fmt.min_val() && v <= fmt.max_val());
+        }
+        assert!(stats.r > 0.0); // scale 8 >> range 8 ⇒ saturation
+    }
+
+    #[test]
+    fn nearest_is_round_half_up() {
+        let fmt = Format::new(4, 2); // step 0.25
+        let (q, _) = quantize_slice(&[0.124, 0.126, 0.125, -0.125], fmt, 0,
+                                    RoundMode::Nearest);
+        assert_eq!(q, vec![0.0, 0.25, 0.25, -0.0]);
+    }
+
+    #[test]
+    fn stochastic_idempotent() {
+        let fmt = Format::new(6, 8);
+        let x = randvec(2048, 4.0, 2);
+        let (q1, _) = quantize_slice(&x, fmt, 1, RoundMode::Stochastic);
+        let (q2, s2) = quantize_slice(&q1, fmt, 99, RoundMode::Stochastic);
+        assert_eq!(q1, q2);
+        assert_eq!(s2.e, 0.0);
+    }
+
+    #[test]
+    fn stochastic_unbiased() {
+        // E[Q(0.3)] == 0.3 at step 1/16.
+        let fmt = Format::new(4, 4);
+        let mut acc = 0.0f64;
+        let n = 40_000;
+        for s in 0..n {
+            let (q, _) = quantize_slice(&[0.3], fmt, s, RoundMode::Stochastic);
+            acc += q[0] as f64;
+        }
+        let mean = acc / n as f64;
+        assert!((mean - 0.3).abs() < 2e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn nearest_biased() {
+        let fmt = Format::new(4, 4);
+        let (q, _) = quantize_slice(&[0.3], fmt, 0, RoundMode::Nearest);
+        assert_eq!(q[0], 0.3125);
+    }
+
+    #[test]
+    fn error_monotone_in_fl() {
+        let x = randvec(8192, 0.5, 3);
+        let mut last = f32::INFINITY;
+        for fl in [2, 6, 10, 14] {
+            let (_, s) = quantize_slice(&x, Format::new(4, fl), 5,
+                                        RoundMode::Stochastic);
+            assert!(s.e < last, "fl={fl}: {} !< {last}", s.e);
+            last = s.e;
+        }
+    }
+
+    #[test]
+    fn overflow_monotone_in_il() {
+        let x = randvec(8192, 8.0, 4);
+        let mut last = 2.0f32;
+        for il in [1, 3, 5, 8] {
+            let (_, s) = quantize_slice(&x, Format::new(il, 8), 5,
+                                        RoundMode::Stochastic);
+            assert!(s.r < last, "il={il}");
+            last = s.r;
+        }
+    }
+
+    #[test]
+    fn offset_slices_compose() {
+        // Quantizing [a | b] == quantizing a at 0 ++ b at a.len().
+        let x = randvec(1000, 2.0, 5);
+        let fmt = Format::new(5, 7);
+        let (whole, _) = quantize_slice(&x, fmt, 11, RoundMode::Stochastic);
+        let mut front = Vec::new();
+        let mut back = Vec::new();
+        quantize_slice_at(&x[..400], 0, fmt, 11, RoundMode::Stochastic, &mut front);
+        quantize_slice_at(&x[400..], 400, fmt, 11, RoundMode::Stochastic, &mut back);
+        front.extend_from_slice(&back);
+        assert_eq!(whole, front);
+    }
+
+    #[test]
+    fn large_magnitude_no_residual_spill() {
+        // Regression for the floor(x*s + u) f32 bug: values whose scaled
+        // magnitude is large must still round within one step.
+        let fmt = Format::new(6, 8);
+        let x = [9.40234375f32, 2407.0 / 256.0, 31.99609375];
+        for seed in 0..200 {
+            let (q, _) = quantize_slice(&x, fmt, seed, RoundMode::Stochastic);
+            for (&xi, &qi) in x.iter().zip(&q) {
+                assert!((qi - xi).abs() <= fmt.step() + 1e-7,
+                        "x={xi} q={qi} seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let (q, s) = quantize_slice(&[0.0; 64], Format::new(4, 8), 3,
+                                    RoundMode::Stochastic);
+        assert!(q.iter().all(|&v| v == 0.0));
+        assert_eq!(s.e, 0.0);
+        assert_eq!(s.r, 0.0);
+    }
+}

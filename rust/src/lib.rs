@@ -1,0 +1,64 @@
+//! # qedps — quantization-error-driven dynamic precision scaling
+//!
+//! Rust coordinator (L3) of the three-layer reproduction of Stuart & Taras,
+//! *"Quantization Error as a Metric for Dynamic Precision Scaling in Neural
+//! Net Training"* (2018).  The compute graphs (L2: JAX, L1: Pallas) are
+//! AOT-lowered to HLO text by `python/compile/aot.py`; this crate loads the
+//! artifacts through the PJRT C API and owns everything at run time:
+//!
+//! * [`runtime`] — manifest-driven loading/execution of the AOT artifacts;
+//! * [`policy`] — the paper's contribution: the `<IL, FL>` controllers
+//!   (quantization-error + overflow driven scaling, plus every baseline the
+//!   paper compares against);
+//! * [`trainer`] — the training loop: batches in, stats out, precision
+//!   re-decided each iteration;
+//! * [`fixedpoint`] — bit-exact software mirror of the L1 quantizer (used
+//!   by parity tests, the MAC simulator and the policy unit tests);
+//! * [`data`] — MNIST IDX loader + the offline synthetic-digit substitute;
+//! * [`macsim`] — cycle model of Na & Mukhopadhyay's flexible MAC unit
+//!   (turns measured bit-width trajectories into hardware speedup);
+//! * [`coordinator`] — experiment drivers that regenerate every figure and
+//!   table in the paper;
+//! * [`util`], [`config`], [`cli`], [`metrics`], [`bench`], [`testutil`] —
+//!   in-repo substrates (JSON, TOML-subset config, CLI, CSV, RNG,
+//!   micro-bench and property-test harnesses); the offline crate set has no
+//!   serde/clap/criterion/proptest/rand.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! Python invocation, and the `repro` binary is self-contained afterwards.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fixedpoint;
+pub mod macsim;
+pub mod metrics;
+pub mod policy;
+pub mod runtime;
+pub mod testutil;
+pub mod trainer;
+pub mod util;
+
+/// Canonical location of the AOT artifacts relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$QEDPS_ARTIFACTS`, else `./artifacts`,
+/// else walk up from the current dir (so tests/examples work from anywhere
+/// inside the repo).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("QEDPS_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}

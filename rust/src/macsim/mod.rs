@@ -1,0 +1,123 @@
+//! Cycle model of Na & Mukhopadhyay's **flexible multiply-accumulate
+//! unit** — the hardware that motivates the whole paper (§6: lower
+//! bit-width ⇒ direct training speedup).
+//!
+//! We cannot fabricate their unit, so we model it (DESIGN.md substitution
+//! #4): the flexible MAC decomposes a `wa x ww`-bit multiply into
+//! `ceil(wa/g) * ceil(ww/g)` sub-multiplies on a `g x g` array (g = 8 in
+//! their design) and retires a fixed number of sub-multiplies per cycle.
+//! Accumulation is wide (48-bit) and free.  A 32x32 MAC therefore costs
+//! 16 sub-ops while an 8x8 MAC costs 1 — the 16x ceiling their Table II
+//! reports; real speedup follows the *measured bit-width trajectory* that
+//! the DPS controller produces, which is exactly what `repro macsim`
+//! computes.
+//!
+//! [`unit`] — the per-MAC cycle cost model (+ exact-arithmetic validation
+//! against [`crate::fixedpoint::arith`]).
+//! [`network`] — per-layer MAC counts inferred from model parameter shapes.
+
+pub mod network;
+pub mod unit;
+
+pub use network::{layer_costs, LayerCost};
+pub use unit::MacUnit;
+
+use crate::policy::PrecState;
+
+/// Cycles for one training iteration at a given precision state.
+///
+/// Forward multiplies activations by weights; backward multiplies upstream
+/// gradients by weights (dX) and by activations (dW) — the standard 1:2
+/// fwd:bwd MAC ratio.
+pub fn iteration_cycles(unit: &MacUnit, layers: &[LayerCost], prec: &PrecState) -> u64 {
+    let wa = prec.acts.bits() as u32;
+    let ww = prec.weights.bits() as u32;
+    let wg = prec.grads.bits() as u32;
+    let mut cycles = 0u64;
+    for l in layers {
+        cycles += l.macs * unit.cycles_per_mac(wa, ww); // fwd
+        cycles += l.macs * unit.cycles_per_mac(wg, ww); // bwd dX
+        cycles += l.macs * unit.cycles_per_mac(wg, wa); // bwd dW
+    }
+    cycles
+}
+
+/// Speedup of a measured precision trajectory vs an all-32-bit baseline.
+pub fn trajectory_speedup(
+    unit: &MacUnit,
+    layers: &[LayerCost],
+    trajectory: &[PrecState],
+) -> f64 {
+    use crate::fixedpoint::Format;
+    let f32_state = PrecState::uniform(Format::new(16, 16)); // 32-bit words
+    let base = iteration_cycles(unit, layers, &f32_state) as f64
+        * trajectory.len() as f64;
+    let actual: f64 = trajectory
+        .iter()
+        .map(|p| iteration_cycles(unit, layers, p) as f64)
+        .sum();
+    base / actual.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::Format;
+
+    fn lenet_layers() -> Vec<LayerCost> {
+        network::layer_costs(
+            &[
+                ("cw1", vec![5, 5, 1, 20]),
+                ("cw2", vec![5, 5, 20, 50]),
+                ("fw1", vec![800, 500]),
+                ("fw2", vec![500, 10]),
+            ],
+            (28, 28),
+            64,
+        )
+    }
+
+    #[test]
+    fn low_precision_is_faster() {
+        let unit = MacUnit::default();
+        let layers = lenet_layers();
+        let wide = iteration_cycles(&unit, &layers,
+                                    &PrecState::uniform(Format::new(16, 16)));
+        let narrow = iteration_cycles(&unit, &layers,
+                                      &PrecState::uniform(Format::new(4, 4)));
+        assert!(narrow * 10 < wide, "narrow={narrow} wide={wide}");
+    }
+
+    #[test]
+    fn speedup_of_constant_8bit_is_16x() {
+        let unit = MacUnit::default();
+        let layers = lenet_layers();
+        let traj = vec![PrecState::uniform(Format::new(4, 4)); 10];
+        let s = trajectory_speedup(&unit, &layers, &traj);
+        assert!((s - 16.0).abs() < 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn speedup_of_32bit_trajectory_is_1x() {
+        let unit = MacUnit::default();
+        let layers = lenet_layers();
+        let traj = vec![PrecState::uniform(Format::new(16, 16)); 5];
+        assert!((trajectory_speedup(&unit, &layers, &traj) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_precision_classes_priced_separately() {
+        let unit = MacUnit::default();
+        let layers = lenet_layers();
+        // cheap acts/weights, expensive grads: bwd dominates
+        let p = PrecState {
+            weights: Format::new(4, 4),
+            acts: Format::new(4, 4),
+            grads: Format::new(12, 12),
+        };
+        let c = iteration_cycles(&unit, &layers, &p);
+        let all8 = iteration_cycles(&unit, &layers,
+                                    &PrecState::uniform(Format::new(4, 4)));
+        assert!(c > all8);
+    }
+}

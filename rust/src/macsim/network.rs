@@ -1,0 +1,98 @@
+//! Per-layer MAC counts, inferred from model parameter shapes.
+//!
+//! The inference covers the architecture family used in this repo (and the
+//! paper): 4-d params are VALID stride-1 convs each followed by a 2x2
+//! max-pool, 2-d params are fully-connected layers; 1-d params (biases)
+//! contribute no MACs.  Spatial dims are tracked through the stack so conv
+//! MAC counts are exact.
+
+/// One multiply-bearing layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerCost {
+    pub name: String,
+    /// MACs for one forward pass at the given batch size.
+    pub macs: u64,
+}
+
+/// Infer layer costs from (name, shape) parameter list.
+///
+/// `input_hw` is the spatial size of the network input; `batch` scales all
+/// counts.  Conv shapes are HWIO (kh, kw, cin, cout), FC shapes (in, out).
+pub fn layer_costs(
+    params: &[(&str, Vec<usize>)],
+    input_hw: (usize, usize),
+    batch: usize,
+) -> Vec<LayerCost> {
+    let (mut h, mut w) = input_hw;
+    let mut out = Vec::new();
+    for (name, shape) in params {
+        match shape.len() {
+            4 => {
+                let (kh, kw, cin, cout) = (shape[0], shape[1], shape[2], shape[3]);
+                let oh = h - kh + 1;
+                let ow = w - kw + 1;
+                let macs = (batch * oh * ow * cout * cin * kh * kw) as u64;
+                out.push(LayerCost { name: name.to_string(), macs });
+                // conv is followed by 2x2 pool in this family
+                h = oh / 2;
+                w = ow / 2;
+            }
+            2 => {
+                let macs = (batch * shape[0] * shape[1]) as u64;
+                out.push(LayerCost { name: name.to_string(), macs });
+            }
+            _ => {} // bias
+        }
+    }
+    out
+}
+
+/// Total MACs of one forward pass.
+pub fn total_macs(layers: &[LayerCost]) -> u64 {
+    layers.iter().map(|l| l.macs).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_counts_exact() {
+        let layers = layer_costs(
+            &[
+                ("cw1", vec![5, 5, 1, 20]),
+                ("cb1", vec![20]),
+                ("cw2", vec![5, 5, 20, 50]),
+                ("cb2", vec![50]),
+                ("fw1", vec![800, 500]),
+                ("fb1", vec![500]),
+                ("fw2", vec![500, 10]),
+                ("fb2", vec![10]),
+            ],
+            (28, 28),
+            1,
+        );
+        assert_eq!(layers.len(), 4);
+        // conv1: 24*24*20*1*25 = 288_000
+        assert_eq!(layers[0].macs, 288_000);
+        // conv2: input 12x12 -> out 8x8: 8*8*50*20*25 = 1_600_000
+        assert_eq!(layers[1].macs, 1_600_000);
+        assert_eq!(layers[2].macs, 400_000);
+        assert_eq!(layers[3].macs, 5_000);
+        assert_eq!(total_macs(&layers), 2_293_000);
+    }
+
+    #[test]
+    fn batch_scales_linearly() {
+        let p = [("w", vec![10usize, 4])];
+        let a = layer_costs(&p, (28, 28), 1);
+        let b = layer_costs(&p, (28, 28), 64);
+        assert_eq!(b[0].macs, 64 * a[0].macs);
+    }
+
+    #[test]
+    fn biases_free() {
+        let layers = layer_costs(&[("b", vec![10usize])], (28, 28), 1);
+        assert!(layers.is_empty());
+    }
+}

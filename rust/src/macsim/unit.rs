@@ -1,0 +1,109 @@
+//! Per-MAC cycle cost of the flexible multiplier-accumulator.
+
+use crate::fixedpoint::arith::{Fixed, MacAccumulator};
+use crate::fixedpoint::Format;
+
+/// The flexible MAC unit: a grid of `granule x granule` sub-multipliers,
+/// `throughput` sub-multiplies retired per cycle, wide accumulator.
+#[derive(Debug, Clone)]
+pub struct MacUnit {
+    /// Sub-multiplier operand width in bits (8 in the ISLPED'16 design).
+    pub granule: u32,
+    /// Sub-multiplies retired per cycle (the unit's full 32x32 capacity:
+    /// 16 granules => a 32x32 MAC takes 16/16 = 1... we normalize so that a
+    /// full-width 32x32 multiply costs 16 cycles and an 8x8 costs 1, i.e.
+    /// throughput = 1 granule/cycle per lane).
+    pub throughput: u32,
+}
+
+impl Default for MacUnit {
+    fn default() -> Self {
+        Self { granule: 8, throughput: 1 }
+    }
+}
+
+impl MacUnit {
+    /// Cycles to multiply a `wa`-bit activation by a `ww`-bit weight and
+    /// accumulate.  Sub-multiplies needed: ceil(wa/g) * ceil(ww/g).
+    pub fn cycles_per_mac(&self, wa: u32, ww: u32) -> u64 {
+        let ga = wa.max(1).div_ceil(self.granule) as u64;
+        let gw = ww.max(1).div_ceil(self.granule) as u64;
+        (ga * gw).div_ceil(self.throughput as u64)
+    }
+
+    /// Peak speedup of `w`-bit ops over 32-bit ops on this unit.
+    pub fn speedup_vs_32(&self, w: u32) -> f64 {
+        self.cycles_per_mac(32, 32) as f64 / self.cycles_per_mac(w, w) as f64
+    }
+
+    /// Execute a dot product *exactly as the hardware would* (integer
+    /// sub-multiplies, wide accumulate) and report (value, cycles).  Used
+    /// by tests to pin the cost model to real arithmetic.
+    pub fn execute_dot(
+        &self,
+        a: &[f32],
+        w: &[f32],
+        fmt_a: Format,
+        fmt_w: Format,
+    ) -> (f64, u64) {
+        assert_eq!(a.len(), w.len());
+        let mut acc = MacAccumulator::new(fmt_a, fmt_w);
+        let mut cycles = 0;
+        for (&x, &y) in a.iter().zip(w) {
+            acc.mac(Fixed::encode(x, fmt_a), Fixed::encode(y, fmt_w));
+            cycles += self.cycles_per_mac(fmt_a.bits() as u32, fmt_w.bits() as u32);
+        }
+        (acc.value(), cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::quantize::{quantize_slice, RoundMode};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn cycle_table_matches_islped_shape() {
+        let u = MacUnit::default();
+        // (wa, ww) -> cycles
+        assert_eq!(u.cycles_per_mac(8, 8), 1);
+        assert_eq!(u.cycles_per_mac(16, 8), 2);
+        assert_eq!(u.cycles_per_mac(16, 16), 4);
+        assert_eq!(u.cycles_per_mac(32, 32), 16);
+        assert_eq!(u.cycles_per_mac(9, 8), 2); // partial granule rounds up
+        assert_eq!(u.cycles_per_mac(1, 1), 1);
+    }
+
+    #[test]
+    fn speedup_table() {
+        let u = MacUnit::default();
+        assert_eq!(u.speedup_vs_32(8), 16.0);
+        assert_eq!(u.speedup_vs_32(16), 4.0);
+        assert_eq!(u.speedup_vs_32(32), 1.0);
+    }
+
+    #[test]
+    fn execute_dot_matches_f64_and_prices_correctly() {
+        let u = MacUnit::default();
+        let fmt_a = Format::new(4, 6);
+        let fmt_w = Format::new(2, 8);
+        let mut rng = Pcg32::seeded(3);
+        let raw_a: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+        let raw_w: Vec<f32> = (0..128).map(|_| rng.normal() as f32 * 0.1).collect();
+        let (qa, _) = quantize_slice(&raw_a, fmt_a, 1, RoundMode::Stochastic);
+        let (qw, _) = quantize_slice(&raw_w, fmt_w, 2, RoundMode::Stochastic);
+        let (val, cycles) = u.execute_dot(&qa, &qw, fmt_a, fmt_w);
+        let f64dot: f64 = qa.iter().zip(&qw).map(|(&x, &y)| x as f64 * y as f64).sum();
+        assert!((val - f64dot).abs() < 1e-9);
+        // <4,6> = 10 bits -> 2 granules; <2,8> = 10 bits -> 2 granules; 4 c/MAC
+        assert_eq!(cycles, 128 * 4);
+    }
+
+    #[test]
+    fn wider_throughput_scales_down_cycles() {
+        let u = MacUnit { granule: 8, throughput: 4 };
+        assert_eq!(u.cycles_per_mac(32, 32), 4);
+        assert_eq!(u.cycles_per_mac(8, 8), 1); // floor at 1 cycle
+    }
+}

@@ -1,0 +1,174 @@
+//! `repro` — the qedps launcher.
+//!
+//! ```text
+//! repro train    [--model M] [--scheme S] [--iters N] [--config F] [--set k=v]...
+//! repro figures  --fig 3|4   [same flags]           regenerate paper figures
+//! repro compare  [--schemes a,b,c]                  Table-1 head-to-head
+//! repro rounding-ab                                 Eq.1 vs Eq.2 A/B
+//! repro macsim   [--model M]                        flexible-MAC speedup table
+//! repro gen-data --out DIR [--n N]                  write synthetic IDX files
+//! repro info                                        artifact/manifest summary
+//! ```
+
+use anyhow::{bail, Result};
+
+use qedps::cli::{Args, Spec};
+use qedps::config::ExperimentConfig;
+use qedps::coordinator::{self, figures};
+use qedps::runtime::Runtime;
+
+const SPEC: Spec = Spec {
+    name: "repro",
+    about: "dynamic precision scaling training (Stuart & Taras 2018 reproduction)",
+    flags: &[
+        ("model", "mlp|lenet", "network (default lenet)"),
+        ("scheme", "NAME", "policy: qedps|na|courbariaux|fixed|fixed13|gupta88|float|schedule"),
+        ("iters", "N", "training iterations"),
+        ("config", "FILE", "TOML config file"),
+        ("set", "k=v", "config override (repeatable)"),
+        ("fig", "3|4", "which figure (for `figures`)"),
+        ("schemes", "a,b,c", "comma list (for `compare`)"),
+        ("out", "DIR", "output dir (for `gen-data`)"),
+        ("n", "N", "sample count (for `gen-data`)"),
+        ("agg", "mean|max|last", "stat aggregation across sites"),
+        ("checkpoint-dir", "DIR", "save checkpoints here"),
+    ],
+    switches: &[("help", "show usage"), ("quiet", "warnings only")],
+};
+
+fn build_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(m) = args.flag("model") {
+        cfg.model = m.into();
+    }
+    if let Some(s) = args.flag("scheme") {
+        cfg.scheme = s.into();
+    }
+    if let Some(i) = args.flag_parse::<u64>("iters")? {
+        cfg.iters = i;
+    }
+    if let Some(a) = args.flag("agg") {
+        cfg.agg = qedps::policy::AggMode::from_str(a)
+            .ok_or_else(|| anyhow::anyhow!("--agg must be mean|max|last"))?;
+    }
+    if let Some(d) = args.flag("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(d.into());
+    }
+    for kv in args.flag_all("set") {
+        cfg.apply_set(kv)?;
+    }
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    qedps::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match argv.split_first() {
+        Some((s, rest)) if !s.starts_with("--") => (s.clone(), rest.to_vec()),
+        _ => ("help".to_string(), argv),
+    };
+    let args = Args::parse(&SPEC, &rest)?;
+    if args.switch("quiet") {
+        qedps::util::logging::set_level(qedps::util::logging::Level::Warn);
+    }
+    if args.switch("help") || sub == "help" {
+        print!("{}", SPEC.usage());
+        println!("\nsubcommands: train figures compare rounding-ab macsim gen-data info");
+        return Ok(());
+    }
+
+    match sub.as_str() {
+        "train" => {
+            let cfg = build_config(&args)?;
+            let mut rt = Runtime::create()?;
+            let tag = format!("train_{}_{}", cfg.model, cfg.scheme);
+            let hist = coordinator::run_and_record(&mut rt, &cfg, &tag)?;
+            let s = hist.summary();
+            println!("\n=== {tag} ===");
+            println!("final test acc : {:.4}", s.final_test_acc);
+            println!("best test acc  : {:.4}", s.best_test_acc);
+            println!("mean bits (w/a/g): {:.1} / {:.1} / {:.1}",
+                     s.mean_weight_bits, s.mean_act_bits, s.mean_grad_bits);
+            println!("mean step time : {:.1} ms", s.mean_step_ms);
+            println!("records under  : {}", cfg.out_dir);
+        }
+        "figures" => {
+            let cfg = build_config(&args)?;
+            let mut rt = Runtime::create()?;
+            match args.flag("fig") {
+                Some("3") => {
+                    figures::fig3(&mut rt, &cfg)?;
+                }
+                Some("4") => {
+                    figures::fig4(&mut rt, &cfg)?;
+                }
+                _ => {
+                    figures::fig3(&mut rt, &cfg)?;
+                    figures::fig4(&mut rt, &cfg)?;
+                }
+            }
+        }
+        "compare" => {
+            let cfg = build_config(&args)?;
+            let schemes_owned: Vec<String> = args
+                .flag("schemes")
+                .unwrap_or("qedps,na,courbariaux,gupta88,fixed13,float")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .collect();
+            let schemes: Vec<&str> = schemes_owned.iter().map(|s| s.as_str()).collect();
+            let mut rt = Runtime::create()?;
+            let rows = coordinator::compare_schemes(&mut rt, &cfg, &schemes)?;
+            coordinator::print_compare_table(&rows);
+            let out = std::path::Path::new(&cfg.out_dir).join("compare.json");
+            std::fs::create_dir_all(&cfg.out_dir)?;
+            std::fs::write(&out, coordinator::compare_rows_json(&rows).to_string_pretty())?;
+            println!("wrote {}", out.display());
+        }
+        "rounding-ab" => {
+            let cfg = build_config(&args)?;
+            let mut rt = Runtime::create()?;
+            figures::rounding_ab(&mut rt, &cfg)?;
+        }
+        "macsim" => {
+            let cfg = build_config(&args)?;
+            let rt = Runtime::create()?;
+            figures::macsim_report(&rt, &cfg.model)?;
+        }
+        "gen-data" => {
+            let out = args.flag("out").unwrap_or("data/synth");
+            let n = args.flag_parse::<usize>("n")?.unwrap_or(10_000);
+            let dir = std::path::Path::new(out);
+            std::fs::create_dir_all(dir)?;
+            let train = qedps::data::synth::generate(n, 2018);
+            let test = qedps::data::synth::generate(n / 5, 2019);
+            qedps::data::mnist::write_idx_images(&dir.join("train-images-idx3-ubyte"), &train)?;
+            qedps::data::mnist::write_idx_labels(&dir.join("train-labels-idx1-ubyte"), &train)?;
+            qedps::data::mnist::write_idx_images(&dir.join("t10k-images-idx3-ubyte"), &test)?;
+            qedps::data::mnist::write_idx_labels(&dir.join("t10k-labels-idx1-ubyte"), &test)?;
+            println!("wrote {} train / {} test IDX files to {}", train.n, test.n, out);
+        }
+        "info" => {
+            let rt = Runtime::create()?;
+            println!("artifacts: {}", rt.dir.display());
+            println!("platform : {}", rt.client.platform_name());
+            println!("batches  : train={} eval={}", rt.manifest.train_batch,
+                     rt.manifest.eval_batch);
+            println!("\nmodels:");
+            for (name, m) in &rt.manifest.models {
+                println!("  {name}: {} params in {} tensors, input {:?}",
+                         m.param_count(), m.params.len(), m.input_shape);
+            }
+            println!("\nmodules:");
+            for (name, m) in &rt.manifest.modules {
+                println!("  {name:<22} kind={:<9} in={:<2} out={:<2} sites={}",
+                         m.kind, m.inputs.len(), m.outputs.len(), m.sites.len());
+            }
+        }
+        other => bail!("unknown subcommand '{other}' — try `repro help`"),
+    }
+    Ok(())
+}

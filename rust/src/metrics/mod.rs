@@ -1,0 +1,215 @@
+//! Training/eval metric records, the run history, and CSV/JSON export —
+//! the data behind every regenerated figure.
+
+use std::path::Path;
+
+use crate::policy::PrecState;
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+
+/// One logged training iteration.
+#[derive(Debug, Clone)]
+pub struct TrainRecord {
+    pub iter: u64,
+    pub loss: f32,
+    pub acc: f32,
+    pub lr: f64,
+    pub prec: PrecState,
+    /// Aggregated per-class stats [weights, acts, grads].
+    pub e: [f32; 3],
+    pub r: [f32; 3],
+    pub step_ms: f64,
+}
+
+/// One test-set evaluation.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub iter: u64,
+    pub test_loss: f32,
+    pub test_acc: f32,
+}
+
+/// Full history of a run.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub scheme: String,
+    pub model: String,
+    pub train: Vec<TrainRecord>,
+    pub eval: Vec<EvalRecord>,
+}
+
+/// The numbers the paper's abstract quotes (avg bit-widths + accuracy).
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub final_test_acc: f32,
+    pub best_test_acc: f32,
+    pub final_train_loss: f32,
+    pub mean_weight_bits: f64,
+    pub mean_act_bits: f64,
+    pub mean_grad_bits: f64,
+    pub min_weight_bits: i32,
+    pub min_act_bits: i32,
+    pub mean_step_ms: f64,
+    pub iters: u64,
+}
+
+impl History {
+    pub fn new(scheme: &str, model: &str) -> Self {
+        Self { scheme: scheme.into(), model: model.into(), ..Default::default() }
+    }
+
+    pub fn summary(&self) -> RunSummary {
+        let n = self.train.len().max(1) as f64;
+        let mean = |f: &dyn Fn(&TrainRecord) -> f64| -> f64 {
+            self.train.iter().map(|r| f(r)).sum::<f64>() / n
+        };
+        RunSummary {
+            final_test_acc: self.eval.last().map(|e| e.test_acc).unwrap_or(0.0),
+            best_test_acc: self
+                .eval
+                .iter()
+                .map(|e| e.test_acc)
+                .fold(0.0, f32::max),
+            final_train_loss: self.train.last().map(|r| r.loss).unwrap_or(f32::NAN),
+            mean_weight_bits: mean(&|r| r.prec.weights.bits() as f64),
+            mean_act_bits: mean(&|r| r.prec.acts.bits() as f64),
+            mean_grad_bits: mean(&|r| r.prec.grads.bits() as f64),
+            min_weight_bits: self
+                .train
+                .iter()
+                .map(|r| r.prec.weights.bits())
+                .min()
+                .unwrap_or(0),
+            min_act_bits: self
+                .train
+                .iter()
+                .map(|r| r.prec.acts.bits())
+                .min()
+                .unwrap_or(0),
+            mean_step_ms: mean(&|r| r.step_ms),
+            iters: self.train.last().map(|r| r.iter + 1).unwrap_or(0),
+        }
+    }
+
+    /// Figure-3 / figure-4 CSV: one row per logged iteration.
+    pub fn write_train_csv<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "iter", "loss", "acc", "lr", "il_w", "fl_w", "bits_w", "il_a",
+                "fl_a", "bits_a", "il_g", "fl_g", "bits_g", "e_w", "e_a",
+                "e_g", "r_w", "r_a", "r_g", "step_ms",
+            ],
+        )?;
+        for r in &self.train {
+            w.row(&[
+                r.iter as f64,
+                r.loss as f64,
+                r.acc as f64,
+                r.lr,
+                r.prec.weights.il as f64,
+                r.prec.weights.fl as f64,
+                r.prec.weights.bits() as f64,
+                r.prec.acts.il as f64,
+                r.prec.acts.fl as f64,
+                r.prec.acts.bits() as f64,
+                r.prec.grads.il as f64,
+                r.prec.grads.fl as f64,
+                r.prec.grads.bits() as f64,
+                r.e[0] as f64,
+                r.e[1] as f64,
+                r.e[2] as f64,
+                r.r[0] as f64,
+                r.r[1] as f64,
+                r.r[2] as f64,
+                r.step_ms,
+            ])?;
+        }
+        w.flush()
+    }
+
+    pub fn write_eval_csv<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+        let mut w = CsvWriter::create(path, &["iter", "test_loss", "test_acc"])?;
+        for e in &self.eval {
+            w.row(&[e.iter as f64, e.test_loss as f64, e.test_acc as f64])?;
+        }
+        w.flush()
+    }
+
+    /// JSON blob with the summary (machine-readable experiment record).
+    pub fn summary_json(&self) -> Json {
+        let s = self.summary();
+        Json::obj(vec![
+            ("scheme", Json::Str(self.scheme.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("iters", Json::Num(s.iters as f64)),
+            ("final_test_acc", Json::Num(s.final_test_acc as f64)),
+            ("best_test_acc", Json::Num(s.best_test_acc as f64)),
+            ("final_train_loss", Json::Num(s.final_train_loss as f64)),
+            ("mean_weight_bits", Json::Num(s.mean_weight_bits)),
+            ("mean_act_bits", Json::Num(s.mean_act_bits)),
+            ("mean_grad_bits", Json::Num(s.mean_grad_bits)),
+            ("min_weight_bits", Json::Num(s.min_weight_bits as f64)),
+            ("min_act_bits", Json::Num(s.min_act_bits as f64)),
+            ("mean_step_ms", Json::Num(s.mean_step_ms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::Format;
+
+    fn rec(iter: u64, bits: i32) -> TrainRecord {
+        TrainRecord {
+            iter,
+            loss: 1.0 / (iter + 1) as f32,
+            acc: 0.5,
+            lr: 0.01,
+            prec: PrecState::uniform(Format::new(bits / 2, bits - bits / 2)),
+            e: [0.0; 3],
+            r: [0.0; 3],
+            step_ms: 10.0,
+        }
+    }
+
+    #[test]
+    fn summary_averages_bits() {
+        let mut h = History::new("qedps", "lenet");
+        h.train.push(rec(0, 16));
+        h.train.push(rec(1, 12));
+        h.eval.push(EvalRecord { iter: 1, test_loss: 0.5, test_acc: 0.9 });
+        h.eval.push(EvalRecord { iter: 2, test_loss: 0.4, test_acc: 0.85 });
+        let s = h.summary();
+        assert_eq!(s.mean_weight_bits, 14.0);
+        assert_eq!(s.min_weight_bits, 12);
+        assert_eq!(s.final_test_acc, 0.85);
+        assert_eq!(s.best_test_acc, 0.9);
+        assert_eq!(s.iters, 2);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut h = History::new("qedps", "mlp");
+        for i in 0..5 {
+            h.train.push(rec(i, 16));
+        }
+        let dir = std::env::temp_dir().join("qedps_metrics_test");
+        let path = dir.join("train.csv");
+        h.write_train_csv(&path).unwrap();
+        let (header, rows) = crate::util::csv::read_csv(&path).unwrap();
+        assert_eq!(header[0], "iter");
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[3][0], 3.0);
+    }
+
+    #[test]
+    fn summary_json_has_headline_fields() {
+        let mut h = History::new("qedps", "lenet");
+        h.train.push(rec(0, 16));
+        let j = h.summary_json();
+        assert!(j.get("mean_weight_bits").as_f64().is_some());
+        assert_eq!(j.get("scheme").as_str(), Some("qedps"));
+    }
+}

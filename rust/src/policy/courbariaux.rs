@@ -1,0 +1,137 @@
+//! Courbariaux, Bengio & David (2014): fixed bit-width, dynamic radix.
+//!
+//! The word length is constant (16 in their experiments); only the radix
+//! moves, greedily favouring fractional precision:
+//!
+//! ```text
+//! if R > R_max:        IL += 1  (FL -= 1)     // overflowing: widen range
+//! else if 2R <= R_max: IL -= 1  (FL += 1)     // headroom: favour precision
+//! else:                hold
+//! ```
+
+use super::{Class, Feedback, Policy, PrecState, Rounding};
+use crate::fixedpoint::Format;
+
+#[derive(Debug, Clone)]
+pub struct CourbariauxPolicy {
+    /// Constant word length (IL + FL).
+    pub width: i32,
+    pub r_max: f32,
+    init: PrecState,
+}
+
+impl CourbariauxPolicy {
+    pub fn new(width: i32, r_max: f32, init: PrecState) -> Self {
+        // Re-split the init formats to the fixed width, keeping their IL.
+        let fit = |f: Format| Format::new(f.il.min(width - 1).max(1),
+                                          width - f.il.min(width - 1).max(1));
+        Self {
+            width,
+            r_max,
+            init: PrecState {
+                weights: fit(init.weights),
+                acts: fit(init.acts),
+                grads: fit(init.grads),
+            },
+        }
+    }
+
+    fn shift(&self, fmt: Format, r: f32) -> Format {
+        let il = if r > self.r_max {
+            fmt.il + 1
+        } else if 2.0 * r <= self.r_max {
+            fmt.il - 1
+        } else {
+            fmt.il
+        };
+        let il = il.clamp(1, self.width - 1);
+        Format::new(il, self.width - il)
+    }
+}
+
+impl Policy for CourbariauxPolicy {
+    fn name(&self) -> &'static str {
+        "courbariaux"
+    }
+
+    fn init(&self) -> PrecState {
+        self.init
+    }
+
+    fn update(&mut self, current: PrecState, fb: &Feedback) -> PrecState {
+        let mut next = current;
+        for class in [Class::Weight, Class::Act, Class::Grad] {
+            next.set(class, self.shift(current.get(class), fb.class(class).r));
+        }
+        next
+    }
+
+    fn rounding(&self) -> Rounding {
+        Rounding::Nearest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::ClassStats;
+
+    fn fb(r: f32) -> Feedback {
+        let s = ClassStats { e: 0.0, r };
+        Feedback { iter: 0, loss: 1.0, weights: s, acts: s, grads: s }
+    }
+
+    fn policy() -> CourbariauxPolicy {
+        CourbariauxPolicy::new(16, 1e-4, PrecState::uniform(Format::new(8, 8)))
+    }
+
+    #[test]
+    fn width_invariant_forever() {
+        let mut p = policy();
+        let mut st = p.init();
+        let mut rng = crate::util::rng::Pcg32::seeded(1);
+        for _ in 0..500 {
+            st = p.update(st, &fb(rng.next_f32() * 1e-3));
+            for c in [st.weights, st.acts, st.grads] {
+                assert_eq!(c.bits(), 16);
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_shifts_radix_right() {
+        let mut p = policy();
+        let st = p.update(PrecState::uniform(Format::new(8, 8)), &fb(0.01));
+        assert_eq!(st.weights, Format::new(9, 7));
+    }
+
+    #[test]
+    fn headroom_shifts_radix_left() {
+        let mut p = policy();
+        let st = p.update(PrecState::uniform(Format::new(8, 8)), &fb(0.0));
+        assert_eq!(st.weights, Format::new(7, 9));
+    }
+
+    #[test]
+    fn dead_zone_holds() {
+        // R_max/2 < R <= R_max: neither rule fires.
+        let mut p = policy();
+        let st = p.update(PrecState::uniform(Format::new(8, 8)), &fb(0.8e-4));
+        assert_eq!(st.weights, Format::new(8, 8));
+    }
+
+    #[test]
+    fn il_clamped_within_word() {
+        let mut p = policy();
+        let mut st = PrecState::uniform(Format::new(15, 1));
+        for _ in 0..10 {
+            st = p.update(st, &fb(1.0));
+        }
+        assert_eq!(st.weights, Format::new(15, 1));
+        let mut st = PrecState::uniform(Format::new(1, 15));
+        for _ in 0..10 {
+            st = p.update(st, &fb(0.0));
+        }
+        assert_eq!(st.weights, Format::new(1, 15));
+    }
+}

@@ -1,0 +1,52 @@
+//! Static fixed-point training (Gupta et al. 2015): no scaling at all.
+//!
+//! Covers two paper rows: Gupta's `<8,8>`/`<10,6>`/`<14,2>` global fixed
+//! formats, and the §5 "naive 13-bit diverges" demonstration (`fixed13` in
+//! the factory = `<4,9>` weights/acts).
+
+use super::{Feedback, Policy, PrecState, Rounding};
+
+#[derive(Debug, Clone)]
+pub struct FixedPolicy {
+    state: PrecState,
+}
+
+impl FixedPolicy {
+    pub fn new(state: PrecState) -> Self {
+        Self { state }
+    }
+}
+
+impl Policy for FixedPolicy {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn init(&self) -> PrecState {
+        self.state
+    }
+
+    fn update(&mut self, _current: PrecState, _fb: &Feedback) -> PrecState {
+        self.state
+    }
+
+    fn rounding(&self) -> Rounding {
+        Rounding::Stochastic
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::Format;
+    use crate::policy::ClassStats;
+
+    #[test]
+    fn never_moves() {
+        let init = PrecState::uniform(Format::new(8, 8));
+        let mut p = FixedPolicy::new(init);
+        let s = ClassStats { e: 1.0, r: 1.0 };
+        let fb = Feedback { iter: 9, loss: 99.0, weights: s, acts: s, grads: s };
+        assert_eq!(p.update(init, &fb), init);
+    }
+}

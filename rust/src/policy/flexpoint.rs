@@ -1,0 +1,185 @@
+//! FlexPoint-style controller (Köster et al., NeurIPS'17) — the §5
+//! "future work" scheme the paper wishes it had: a fixed word length with a
+//! shared exponent steered *predictively* from value statistics, rather
+//! than reactively from single-step overflow.
+//!
+//! Köster's Autoflex predicts each tensor's max value from its recent
+//! history and sets the exponent so the predicted max (plus headroom
+//! standard deviations) fits.  Our artifact exposes overflow rate rather
+//! than raw amax, so the predictor runs on the *saturation margin*: it
+//! tracks an EWMA of the overflow rate per class and moves the radix so
+//! that predicted overflow stays just below a tiny target — raising IL
+//! immediately on any overflow burst (FlexPoint is paranoid about clipping,
+//! which corrupts dot products), and lowering it only after a long
+//! clean streak (the prediction horizon).
+//!
+//! | | Courbariaux | FlexPoint (this) |
+//! |---|---|---|
+//! | shrink IL | `2R <= R_max` next step | after `horizon` clean steps |
+//! | grow IL | `R > R_max` (+1) | any overflow (+1, burst +2) |
+
+use super::{Class, Feedback, Policy, PrecState, Rounding};
+use crate::fixedpoint::Format;
+
+#[derive(Debug, Clone)]
+pub struct FlexpointPolicy {
+    /// Word length (16 in Flexpoint's flex16+5).
+    pub width: i32,
+    /// Clean-streak length required before reclaiming an integer bit.
+    pub horizon: u32,
+    /// EWMA decay for the overflow-rate predictor.
+    pub alpha: f32,
+    streak: [u32; 3],
+    ewma_r: [f32; 3],
+    init: PrecState,
+}
+
+impl FlexpointPolicy {
+    pub fn new(width: i32, init: PrecState) -> Self {
+        let fit = |f: Format| {
+            let il = f.il.clamp(1, width - 1);
+            Format::new(il, width - il)
+        };
+        Self {
+            width,
+            horizon: 100,
+            alpha: 0.1,
+            streak: [0; 3],
+            ewma_r: [0.0; 3],
+            init: PrecState {
+                weights: fit(init.weights),
+                acts: fit(init.acts),
+                grads: fit(init.grads),
+            },
+        }
+    }
+}
+
+impl Policy for FlexpointPolicy {
+    fn name(&self) -> &'static str {
+        "flexpoint"
+    }
+
+    fn init(&self) -> PrecState {
+        self.init
+    }
+
+    fn update(&mut self, current: PrecState, fb: &Feedback) -> PrecState {
+        let mut next = current;
+        for (i, class) in [Class::Weight, Class::Act, Class::Grad]
+            .into_iter()
+            .enumerate()
+        {
+            let r = fb.class(class).r;
+            self.ewma_r[i] = (1.0 - self.alpha) * self.ewma_r[i] + self.alpha * r;
+            let fmt = current.get(class);
+            let il = if r > 0.0 {
+                // clipping happened: escalate now; a burst (predictor also
+                // hot) jumps two bits, mirroring Autoflex's margin factor.
+                self.streak[i] = 0;
+                fmt.il + if self.ewma_r[i] > 0.01 { 2 } else { 1 }
+            } else {
+                self.streak[i] += 1;
+                if self.streak[i] >= self.horizon && self.ewma_r[i] < 1e-4 {
+                    self.streak[i] = 0;
+                    fmt.il - 1
+                } else {
+                    fmt.il
+                }
+            };
+            let il = il.clamp(1, self.width - 1);
+            next.set(class, Format::new(il, self.width - il));
+        }
+        next
+    }
+
+    fn rounding(&self) -> Rounding {
+        // Flexpoint itself is rounding-agnostic (Table 1: "N/A"); we pair
+        // it with stochastic rounding like the rest of the repo.
+        Rounding::Stochastic
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::ClassStats;
+
+    fn fb(r: f32) -> Feedback {
+        let s = ClassStats { e: 0.0, r };
+        Feedback { iter: 0, loss: 1.0, weights: s, acts: s, grads: s }
+    }
+
+    fn policy() -> FlexpointPolicy {
+        FlexpointPolicy::new(16, PrecState::uniform(Format::new(4, 12)))
+    }
+
+    #[test]
+    fn width_always_constant() {
+        let mut p = policy();
+        let mut st = p.init();
+        let mut rng = crate::util::rng::Pcg32::seeded(2);
+        for _ in 0..1000 {
+            st = p.update(st, &fb(if rng.next_f32() < 0.05 { 0.01 } else { 0.0 }));
+            assert_eq!(st.weights.bits(), 16);
+            assert_eq!(st.grads.bits(), 16);
+        }
+    }
+
+    #[test]
+    fn overflow_escalates_immediately() {
+        let mut p = policy();
+        let st = p.update(p.init(), &fb(0.001));
+        assert_eq!(st.weights.il, 5);
+    }
+
+    #[test]
+    fn burst_escalates_by_two() {
+        let mut p = policy();
+        let mut st = p.init();
+        for _ in 0..10 {
+            st = p.update(st, &fb(0.5)); // sustained heavy clipping
+        }
+        // after the EWMA warms past 1%, steps jump by 2
+        assert_eq!(st.weights.il, 15); // clamped at width-1
+    }
+
+    #[test]
+    fn reclaims_only_after_clean_horizon() {
+        let mut p = policy();
+        let mut st = p.update(p.init(), &fb(0.001)); // il -> 5
+        for i in 0..p.horizon * 3 {
+            st = p.update(st, &fb(0.0));
+            if i < 50 {
+                assert_eq!(st.weights.il, 5, "reclaimed too early at {i}");
+            }
+        }
+        assert!(st.weights.il < 5, "never reclaimed");
+    }
+
+    #[test]
+    fn hysteresis_beats_courbariaux_on_bursty_traffic() {
+        // bursty overflow every 30 steps: courbariaux oscillates (shrinks
+        // right back), flexpoint holds the safe radix.
+        use crate::policy::CourbariauxPolicy;
+        let mut flex = policy();
+        let mut cour =
+            CourbariauxPolicy::new(16, 1e-4, PrecState::uniform(Format::new(4, 12)));
+        let mut sf = flex.init();
+        let mut sc = cour.init();
+        let mut flex_clip_steps = 0;
+        let mut cour_clip_steps = 0;
+        for i in 0..300 {
+            let r = if i % 30 == 29 { 0.01 } else { 0.0 };
+            // a step that *would* clip if IL dropped below 5
+            if r > 0.0 {
+                flex_clip_steps += (sf.weights.il < 5) as u32;
+                cour_clip_steps += (sc.weights.il < 5) as u32;
+            }
+            sf = flex.update(sf, &fb(r));
+            sc = cour.update(sc, &fb(r));
+        }
+        assert!(flex_clip_steps <= cour_clip_steps,
+                "flex {flex_clip_steps} vs cour {cour_clip_steps}");
+    }
+}

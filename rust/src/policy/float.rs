@@ -1,0 +1,54 @@
+//! The fp32 baseline (paper Fig. 4 "baseline"): runs the non-quantized
+//! artifact; reported bit-width is the constant 32.
+
+use super::{Feedback, Policy, PrecState, Rounding};
+use crate::fixedpoint::Format;
+
+#[derive(Debug, Clone, Default)]
+pub struct FloatPolicy;
+
+impl FloatPolicy {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Policy for FloatPolicy {
+    fn name(&self) -> &'static str {
+        "float"
+    }
+
+    fn init(&self) -> PrecState {
+        // Reported as 32-bit words; the float artifact ignores `prec`.
+        PrecState::uniform(Format::new(16, 16))
+    }
+
+    fn update(&mut self, current: PrecState, _fb: &Feedback) -> PrecState {
+        current
+    }
+
+    fn rounding(&self) -> Rounding {
+        Rounding::Float
+    }
+
+    fn is_float(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::ClassStats;
+
+    #[test]
+    fn is_32_bits_and_inert() {
+        let mut p = FloatPolicy::new();
+        assert!(p.is_float());
+        let st = p.init();
+        assert_eq!(st.weights.bits(), 32);
+        let s = ClassStats { e: 1.0, r: 1.0 };
+        let fb = Feedback { iter: 0, loss: 1.0, weights: s, acts: s, grads: s };
+        assert_eq!(p.update(st, &fb), st);
+    }
+}

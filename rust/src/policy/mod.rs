@@ -1,0 +1,291 @@
+//! Dynamic precision scaling controllers — the paper's contribution (and
+//! every baseline it compares against in Table 1).
+//!
+//! Each iteration the trainer feeds the controller the quantization
+//! feedback measured *inside* the AOT train step (per-site `E` and `R`,
+//! aggregated per attribute class) plus the loss, and the controller emits
+//! the `<IL, FL>` to use for weights, activations and gradients on the
+//! *next* iteration.  Because precision is a runtime input of the HLO
+//! artifact, switching costs nothing.
+//!
+//! | policy        | paper row (Table 1)    | bit-width | radix   | signal |
+//! |---------------|------------------------|-----------|---------|--------|
+//! | [`qedps`]     | **this paper**         | dynamic   | dynamic | E + R  |
+//! | [`na`]        | Na & Mukhopadhyay [1]  | dynamic   | dynamic | loss convergence + R |
+//! | [`courbariaux`]| Courbariaux et al.[2] | fixed     | dynamic | R      |
+//! | [`fixed`]     | Gupta et al. [7]       | fixed     | fixed   | none   |
+//! | [`float`]     | fp32 baseline          | 32        | —       | none   |
+//! | [`schedule`]  | §1 "epoch-based" idea  | scheduled | fixed   | iter   |
+//! | [`flexpoint`] | FlexPoint [9] (§5 wish)| fixed     | predictive | R EWMA |
+
+pub mod courbariaux;
+pub mod fixed;
+pub mod flexpoint;
+pub mod float;
+pub mod na;
+pub mod qedps;
+pub mod schedule;
+
+use crate::fixedpoint::Format;
+
+pub use courbariaux::CourbariauxPolicy;
+pub use fixed::FixedPolicy;
+pub use flexpoint::FlexpointPolicy;
+pub use float::FloatPolicy;
+pub use na::NaPolicy;
+pub use qedps::QedpsPolicy;
+pub use schedule::SchedulePolicy;
+
+/// The three attribute classes the paper scales independently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    Weight,
+    Act,
+    Grad,
+}
+
+impl Class {
+    pub fn from_str(s: &str) -> Option<Class> {
+        match s {
+            "weight" => Some(Class::Weight),
+            "act" => Some(Class::Act),
+            "grad" => Some(Class::Grad),
+            _ => None,
+        }
+    }
+}
+
+/// Precision triple: one `<IL, FL>` per class (the paper's "Global"
+/// granularity — one format per attribute class across all layers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrecState {
+    pub weights: Format,
+    pub acts: Format,
+    pub grads: Format,
+}
+
+impl PrecState {
+    pub fn uniform(fmt: Format) -> Self {
+        Self { weights: fmt, acts: fmt, grads: fmt }
+    }
+
+    pub fn get(&self, c: Class) -> Format {
+        match c {
+            Class::Weight => self.weights,
+            Class::Act => self.acts,
+            Class::Grad => self.grads,
+        }
+    }
+
+    pub fn set(&mut self, c: Class, fmt: Format) {
+        match c {
+            Class::Weight => self.weights = fmt,
+            Class::Act => self.acts = fmt,
+            Class::Grad => self.grads = fmt,
+        }
+    }
+
+    /// Flattened into the artifact's `prec` input layout:
+    /// `[ILw, FLw, ILa, FLa, ILg, FLg]`.
+    pub fn to_vec(&self) -> [f32; 6] {
+        [
+            self.weights.il as f32,
+            self.weights.fl as f32,
+            self.acts.il as f32,
+            self.acts.fl as f32,
+            self.grads.il as f32,
+            self.grads.fl as f32,
+        ]
+    }
+
+    /// Mean word length across the three classes (reporting convenience).
+    pub fn mean_bits(&self) -> f64 {
+        (self.weights.bits() + self.acts.bits() + self.grads.bits()) as f64 / 3.0
+    }
+}
+
+/// Per-class aggregated feedback for one iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassStats {
+    pub e: f32,
+    pub r: f32,
+}
+
+/// Everything a controller may condition on.
+#[derive(Debug, Clone, Copy)]
+pub struct Feedback {
+    pub iter: u64,
+    pub loss: f32,
+    pub weights: ClassStats,
+    pub acts: ClassStats,
+    pub grads: ClassStats,
+}
+
+impl Feedback {
+    pub fn class(&self, c: Class) -> ClassStats {
+        match c {
+            Class::Weight => self.weights,
+            Class::Act => self.acts,
+            Class::Grad => self.grads,
+        }
+    }
+}
+
+/// Which rounding-mode artifact a policy wants (Table 1 "Rounding" column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    Stochastic,
+    Nearest,
+    Float,
+}
+
+/// A dynamic precision scaling controller.
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Initial precision (iteration 0 runs with this).
+    fn init(&self) -> PrecState;
+
+    /// Decide the precision for the next iteration.
+    fn update(&mut self, current: PrecState, fb: &Feedback) -> PrecState;
+
+    /// Rounding mode this scheme was defined with (selects the artifact).
+    fn rounding(&self) -> Rounding {
+        Rounding::Stochastic
+    }
+
+    /// Whether this policy runs the float (non-quantized) artifact.
+    fn is_float(&self) -> bool {
+        false
+    }
+}
+
+/// How per-site stats collapse into the per-class scalars.
+///
+/// The paper's Algorithm 1 measures the *last layer* only; `Mean` across all
+/// sites of a class is the robust default; `Max` is the conservative
+/// variant.  The aggregation ablation bench compares all three.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggMode {
+    Mean,
+    Max,
+    Last,
+}
+
+impl AggMode {
+    pub fn from_str(s: &str) -> Option<AggMode> {
+        match s {
+            "mean" => Some(AggMode::Mean),
+            "max" => Some(AggMode::Max),
+            "last" => Some(AggMode::Last),
+            _ => None,
+        }
+    }
+
+    pub fn collapse(&self, values: &[f32]) -> f32 {
+        if values.is_empty() {
+            return 0.0;
+        }
+        match self {
+            AggMode::Mean => values.iter().sum::<f32>() / values.len() as f32,
+            AggMode::Max => values.iter().cloned().fold(f32::MIN, f32::max),
+            AggMode::Last => *values.last().unwrap(),
+        }
+    }
+}
+
+/// Factory: build a policy by scheme name (the CLI/config surface).
+pub fn make_policy(scheme: &str, opts: &PolicyOptions) -> anyhow::Result<Box<dyn Policy>> {
+    Ok(match scheme {
+        "qedps" => Box::new(QedpsPolicy::new(opts.e_max, opts.r_max, opts.init)),
+        "na" => Box::new(NaPolicy::new(opts.init, opts.r_max)),
+        "courbariaux" => Box::new(CourbariauxPolicy::new(
+            opts.init.weights.bits(),
+            opts.r_max,
+            opts.init,
+        )),
+        "fixed" => Box::new(FixedPolicy::new(opts.init)),
+        "fixed13" => Box::new(FixedPolicy::new(PrecState {
+            // the paper's §5 divergence demonstration: 13-bit weights+acts
+            weights: Format::new(4, 9),
+            acts: Format::new(4, 9),
+            grads: opts.init.grads,
+        })),
+        "gupta88" => Box::new(FixedPolicy::new(PrecState::uniform(Format::new(8, 8)))),
+        "flexpoint" => Box::new(FlexpointPolicy::new(16, opts.init)),
+        "float" => Box::new(FloatPolicy::new()),
+        "schedule" => Box::new(SchedulePolicy::new(opts.init, 1000, 1)),
+        other => anyhow::bail!("unknown scheme '{other}' (qedps|na|courbariaux|fixed|fixed13|gupta88|flexpoint|float|schedule)"),
+    })
+}
+
+/// Tunables shared by the factory (paper defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyOptions {
+    /// `E_max`, the paper's quantization-error threshold (0.01% = 1e-4).
+    pub e_max: f32,
+    /// `R_max`, the overflow-rate threshold (0.01% = 1e-4).
+    pub r_max: f32,
+    /// Starting precision.
+    pub init: PrecState,
+}
+
+impl Default for PolicyOptions {
+    fn default() -> Self {
+        Self {
+            e_max: 1e-4,
+            r_max: 1e-4,
+            // Paper Fig. 3 trajectories start around 16 total bits; gradients
+            // start wide (they "require the most precision").
+            init: PrecState {
+                weights: Format::new(2, 14),
+                acts: Format::new(4, 12),
+                grads: Format::new(2, 20),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prec_vec_layout() {
+        let p = PrecState {
+            weights: Format::new(1, 2),
+            acts: Format::new(3, 4),
+            grads: Format::new(5, 6),
+        };
+        assert_eq!(p.to_vec(), [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(p.mean_bits(), (3 + 7 + 11) as f64 / 3.0);
+    }
+
+    #[test]
+    fn agg_modes() {
+        let v = [0.1, 0.5, 0.2];
+        assert!((AggMode::Mean.collapse(&v) - 0.26666668).abs() < 1e-6);
+        assert_eq!(AggMode::Max.collapse(&v), 0.5);
+        assert_eq!(AggMode::Last.collapse(&v), 0.2);
+        assert_eq!(AggMode::Mean.collapse(&[]), 0.0);
+    }
+
+    #[test]
+    fn factory_all_schemes() {
+        let opts = PolicyOptions::default();
+        for s in ["qedps", "na", "courbariaux", "fixed", "fixed13", "gupta88",
+                  "flexpoint", "float", "schedule"] {
+            let p = make_policy(s, &opts).unwrap();
+            let st = p.init();
+            assert!(st.weights.bits() >= 1, "{s}");
+        }
+        assert!(make_policy("nope", &opts).is_err());
+    }
+
+    #[test]
+    fn fixed13_is_13_bits() {
+        let p = make_policy("fixed13", &PolicyOptions::default()).unwrap();
+        assert_eq!(p.init().weights.bits(), 13);
+        assert_eq!(p.init().acts.bits(), 13);
+    }
+}

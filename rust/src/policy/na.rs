@@ -1,0 +1,192 @@
+//! Na & Mukhopadhyay (ISLPED'16) convergence-based dynamic precision
+//! scaling — the prior state of the art the paper beats.
+//!
+//! Their controller watches *training progress*, not quantization error:
+//! start at a low target word length `tl`; whenever training stagnates
+//! (windowed loss stops improving) or destabilizes (loss spikes / NaN),
+//! raise `tl` by the unit step `s`, up to the hardware maximum `ml`.  The
+//! radix (IL vs FL split) tracks overflow: grow IL on overflow, shrink it
+//! when there is ample headroom.  Rounding is round-to-nearest in their
+//! MAC, so this policy selects the `*_train_nearest` artifact.
+//!
+//! Parameters follow the ISLPED paper's shape (`ml`, `tl`, `s`); the
+//! stagnation detector is the windowed-mean rule described in §III of
+//! their paper (loss mean over the last window not improving by at least
+//! `improve_eps` relative).
+
+use super::{Class, Feedback, Policy, PrecState, Rounding};
+use crate::fixedpoint::Format;
+
+#[derive(Debug, Clone)]
+pub struct NaPolicy {
+    /// Maximum word length the hardware supports.
+    pub ml: i32,
+    /// Current target word length (per class, weights/acts share it).
+    tl: [i32; 3],
+    /// Unit bit step added on stagnation.
+    pub step: i32,
+    /// Overflow threshold steering the radix.
+    pub r_max: f32,
+    /// Loss window for the stagnation detector.
+    window: usize,
+    improve_eps: f32,
+    losses: Vec<f32>,
+    prev_window_mean: Option<f32>,
+    init: PrecState,
+}
+
+impl NaPolicy {
+    pub fn new(init: PrecState, r_max: f32) -> Self {
+        Self {
+            ml: 24,
+            tl: [
+                init.weights.bits(),
+                init.acts.bits(),
+                init.grads.bits(),
+            ],
+            step: 2,
+            r_max,
+            window: 50,
+            improve_eps: 0.01,
+            losses: Vec::new(),
+            prev_window_mean: None,
+            init,
+        }
+    }
+
+    /// Stagnant or unstable? (drives the word-length escalation)
+    fn training_needs_help(&mut self, loss: f32) -> bool {
+        if !loss.is_finite() || loss > 100.0 {
+            self.losses.clear();
+            return true; // numerical instability
+        }
+        self.losses.push(loss);
+        if self.losses.len() < self.window {
+            return false;
+        }
+        let mean: f32 = self.losses.iter().sum::<f32>() / self.losses.len() as f32;
+        self.losses.clear();
+        let stagnant = match self.prev_window_mean {
+            Some(prev) => mean > prev * (1.0 - self.improve_eps),
+            None => false,
+        };
+        self.prev_window_mean = Some(mean);
+        stagnant
+    }
+
+    fn split(&self, tl: i32, fmt: Format, r: f32) -> Format {
+        // Radix: IL tracks overflow, FL takes the rest of the word.
+        let il = if r > self.r_max {
+            fmt.il + 1
+        } else if r * 2.0 <= self.r_max {
+            fmt.il - 1
+        } else {
+            fmt.il
+        };
+        let il = il.clamp(1, tl.max(2) - 1);
+        Format::new(il, (tl - il).max(0)).clamped()
+    }
+}
+
+impl Policy for NaPolicy {
+    fn name(&self) -> &'static str {
+        "na"
+    }
+
+    fn init(&self) -> PrecState {
+        self.init
+    }
+
+    fn update(&mut self, current: PrecState, fb: &Feedback) -> PrecState {
+        if self.training_needs_help(fb.loss) {
+            for t in &mut self.tl {
+                *t = (*t + self.step).min(self.ml);
+            }
+        }
+        let mut next = current;
+        for (i, class) in [Class::Weight, Class::Act, Class::Grad]
+            .into_iter()
+            .enumerate()
+        {
+            let s = fb.class(class);
+            next.set(class, self.split(self.tl[i], current.get(class), s.r));
+        }
+        next
+    }
+
+    fn rounding(&self) -> Rounding {
+        Rounding::Nearest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::ClassStats;
+
+    fn fb(loss: f32, r: f32) -> Feedback {
+        let s = ClassStats { e: 0.0, r };
+        Feedback { iter: 0, loss, weights: s, acts: s, grads: s }
+    }
+
+    fn init() -> PrecState {
+        PrecState::uniform(Format::new(4, 8))
+    }
+
+    #[test]
+    fn word_length_constant_while_improving() {
+        let mut p = NaPolicy::new(init(), 1e-4);
+        let mut st = init();
+        for i in 0..200 {
+            // steadily improving loss
+            st = p.update(st, &fb(2.0 / (1.0 + i as f32 * 0.1), 0.0));
+        }
+        assert_eq!(st.weights.bits(), 12);
+    }
+
+    #[test]
+    fn escalates_on_stagnation() {
+        let mut p = NaPolicy::new(init(), 1e-4);
+        let mut st = init();
+        for _ in 0..200 {
+            st = p.update(st, &fb(1.5, 0.0)); // flat loss
+        }
+        assert!(st.weights.bits() > 12, "bits={}", st.weights.bits());
+        assert!(st.weights.bits() <= 24);
+    }
+
+    #[test]
+    fn escalates_on_instability() {
+        let mut p = NaPolicy::new(init(), 1e-4);
+        let st = p.update(init(), &fb(f32::NAN, 0.0));
+        assert_eq!(st.weights.bits(), 14); // +step immediately
+    }
+
+    #[test]
+    fn capped_at_ml() {
+        let mut p = NaPolicy::new(init(), 1e-4);
+        for _ in 0..100 {
+            p.update(init(), &fb(f32::NAN, 0.0));
+        }
+        let st = p.update(init(), &fb(f32::NAN, 0.0));
+        assert_eq!(st.weights.bits(), p.ml);
+    }
+
+    #[test]
+    fn radix_tracks_overflow() {
+        let mut p = NaPolicy::new(init(), 1e-4);
+        // high overflow: IL should grow within the fixed word
+        let st = p.update(init(), &fb(1.0, 0.5));
+        assert_eq!(st.weights.il, 5);
+        assert_eq!(st.weights.bits(), 12);
+        // ample headroom: IL shrinks
+        let st = p.update(init(), &fb(1.0, 0.0));
+        assert_eq!(st.weights.il, 3);
+        assert_eq!(st.weights.bits(), 12);
+    }
+
+    #[test]
+    fn uses_nearest_rounding() {
+        assert_eq!(NaPolicy::new(init(), 1e-4).rounding(), Rounding::Nearest);
+    }
+}

@@ -1,0 +1,154 @@
+//! **The paper's Algorithm 2**: quantization-error + overflow driven
+//! scaling, applied to each attribute class every iteration.
+//!
+//! ```text
+//! if R > R_max: IL += 1   else: IL -= 1
+//! if E > E_max: FL += 1   else: FL -= 1
+//! ```
+//!
+//! The scheme is deliberately aggressive (§2.2): it *shrinks* whenever the
+//! signal is below threshold, so the bit-width constantly probes downward
+//! and the thresholds (`E_max`, `R_max`, both 0.01% in the paper's
+//! evaluation) are the knobs that stop it from starving training.
+//! `IL`/`FL` are clamped to the legal emulation range (DESIGN.md §4).
+
+use super::{Class, Feedback, Policy, PrecState, Rounding};
+use crate::fixedpoint::Format;
+
+#[derive(Debug, Clone)]
+pub struct QedpsPolicy {
+    pub e_max: f32,
+    pub r_max: f32,
+    init: PrecState,
+}
+
+impl QedpsPolicy {
+    pub fn new(e_max: f32, r_max: f32, init: PrecState) -> Self {
+        Self { e_max, r_max, init }
+    }
+
+    fn scale_one(&self, fmt: Format, e: f32, r: f32) -> Format {
+        let il = if r > self.r_max { fmt.il + 1 } else { fmt.il - 1 };
+        let fl = if e > self.e_max { fmt.fl + 1 } else { fmt.fl - 1 };
+        Format::new(il, fl).clamped()
+    }
+}
+
+impl Policy for QedpsPolicy {
+    fn name(&self) -> &'static str {
+        "qedps"
+    }
+
+    fn init(&self) -> PrecState {
+        self.init
+    }
+
+    fn update(&mut self, current: PrecState, fb: &Feedback) -> PrecState {
+        let mut next = current;
+        for class in [Class::Weight, Class::Act, Class::Grad] {
+            let s = fb.class(class);
+            next.set(class, self.scale_one(current.get(class), s.e, s.r));
+        }
+        next
+    }
+
+    fn rounding(&self) -> Rounding {
+        Rounding::Stochastic
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::ClassStats;
+
+    fn fb(e: f32, r: f32) -> Feedback {
+        let s = ClassStats { e, r };
+        Feedback { iter: 0, loss: 1.0, weights: s, acts: s, grads: s }
+    }
+
+    fn policy() -> QedpsPolicy {
+        QedpsPolicy::new(1e-4, 1e-4, PrecState::uniform(Format::new(8, 8)))
+    }
+
+    #[test]
+    fn grows_on_high_signals() {
+        let mut p = policy();
+        let next = p.update(PrecState::uniform(Format::new(8, 8)), &fb(1.0, 1.0));
+        assert_eq!(next.weights, Format::new(9, 9));
+        assert_eq!(next.acts, Format::new(9, 9));
+        assert_eq!(next.grads, Format::new(9, 9));
+    }
+
+    #[test]
+    fn shrinks_on_low_signals() {
+        let mut p = policy();
+        let next = p.update(PrecState::uniform(Format::new(8, 8)), &fb(0.0, 0.0));
+        assert_eq!(next.weights, Format::new(7, 7));
+    }
+
+    #[test]
+    fn mixed_signals_move_independently() {
+        let mut p = policy();
+        // high E, low R: FL up, IL down
+        let next = p.update(PrecState::uniform(Format::new(8, 8)), &fb(1.0, 0.0));
+        assert_eq!(next.acts, Format::new(7, 9));
+        // low E, high R: FL down, IL up
+        let next = p.update(PrecState::uniform(Format::new(8, 8)), &fb(0.0, 1.0));
+        assert_eq!(next.acts, Format::new(9, 7));
+    }
+
+    #[test]
+    fn threshold_is_strict_greater() {
+        let mut p = policy();
+        // exactly at threshold: treated as "low" -> shrink (Algorithm 2 uses >)
+        let next = p.update(PrecState::uniform(Format::new(8, 8)),
+                            &fb(1e-4, 1e-4));
+        assert_eq!(next.weights, Format::new(7, 7));
+    }
+
+    #[test]
+    fn clamped_at_bounds() {
+        let mut p = policy();
+        let lo = p.update(PrecState::uniform(Format::new(1, 0)), &fb(0.0, 0.0));
+        assert_eq!(lo.weights, Format::new(1, 0));
+        let hi = p.update(PrecState::uniform(Format::new(24, 24)), &fb(1.0, 1.0));
+        assert_eq!(hi.weights, Format::new(24, 24));
+    }
+
+    #[test]
+    fn per_class_independence() {
+        let mut p = policy();
+        let fb = Feedback {
+            iter: 0,
+            loss: 1.0,
+            weights: ClassStats { e: 1.0, r: 1.0 },
+            acts: ClassStats { e: 0.0, r: 0.0 },
+            grads: ClassStats { e: 1.0, r: 0.0 },
+        };
+        let next = p.update(PrecState::uniform(Format::new(8, 8)), &fb);
+        assert_eq!(next.weights, Format::new(9, 9));
+        assert_eq!(next.acts, Format::new(7, 7));
+        assert_eq!(next.grads, Format::new(7, 9));
+    }
+
+    /// Equilibrium behaviour: with a signal that flips across the threshold
+    /// as FL moves, the controller oscillates around the knee instead of
+    /// drifting (this is what produces the paper's plateau trajectories).
+    #[test]
+    fn oscillates_at_knee() {
+        let mut p = policy();
+        let mut st = PrecState::uniform(Format::new(8, 8));
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..50 {
+            // synthetic knee: error is high iff FL < 8
+            let e = if st.acts.fl < 8 { 1.0 } else { 0.0 };
+            st = p.update(st, &fb(e, 0.0));
+            if i > 10 {
+                seen.insert(st.acts.fl);
+            }
+        }
+        assert!(seen.len() <= 3, "drifted: {seen:?}");
+        assert!(seen.contains(&8) || seen.contains(&7));
+    }
+}

@@ -1,0 +1,73 @@
+//! Epoch/iteration-scheduled precision growth — the "easily conceivable"
+//! alternative the paper's introduction mentions but leaves uninvestigated
+//! (§1).  Included as an ablation: bit-width grows by one every
+//! `grow_every` iterations regardless of feedback.  The ablation bench
+//! compares it against feedback-driven scaling.
+
+use super::{Class, Feedback, Policy, PrecState, Rounding};
+use crate::fixedpoint::Format;
+
+#[derive(Debug, Clone)]
+pub struct SchedulePolicy {
+    init: PrecState,
+    pub grow_every: u64,
+    pub step: i32,
+}
+
+impl SchedulePolicy {
+    pub fn new(init: PrecState, grow_every: u64, step: i32) -> Self {
+        Self { init, grow_every, step }
+    }
+}
+
+impl Policy for SchedulePolicy {
+    fn name(&self) -> &'static str {
+        "schedule"
+    }
+
+    fn init(&self) -> PrecState {
+        self.init
+    }
+
+    fn update(&mut self, _current: PrecState, fb: &Feedback) -> PrecState {
+        let grown = (fb.iter / self.grow_every) as i32 * self.step;
+        let mut next = self.init;
+        for class in [Class::Weight, Class::Act, Class::Grad] {
+            let f = self.init.get(class);
+            next.set(class, Format::new(f.il, f.fl + grown).clamped());
+        }
+        next
+    }
+
+    fn rounding(&self) -> Rounding {
+        Rounding::Stochastic
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::ClassStats;
+
+    fn fb(iter: u64) -> Feedback {
+        let s = ClassStats::default();
+        Feedback { iter, loss: 1.0, weights: s, acts: s, grads: s }
+    }
+
+    #[test]
+    fn grows_on_schedule() {
+        let init = PrecState::uniform(Format::new(4, 8));
+        let mut p = SchedulePolicy::new(init, 100, 1);
+        assert_eq!(p.update(init, &fb(0)).weights.fl, 8);
+        assert_eq!(p.update(init, &fb(99)).weights.fl, 8);
+        assert_eq!(p.update(init, &fb(100)).weights.fl, 9);
+        assert_eq!(p.update(init, &fb(350)).weights.fl, 11);
+    }
+
+    #[test]
+    fn clamps_at_max() {
+        let init = PrecState::uniform(Format::new(4, 8));
+        let mut p = SchedulePolicy::new(init, 1, 1);
+        assert_eq!(p.update(init, &fb(1_000_000)).weights.fl, 24);
+    }
+}

@@ -1,0 +1,320 @@
+//! Typed view of `artifacts/manifest.json` (written by `aot.py`).
+//!
+//! The Rust side never hard-codes argument order, shapes, or quantize-site
+//! layout — it all flows from here.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::policy::Class;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+
+    pub fn to_xla(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let name = j.get("name").as_str().context("tensor name")?.to_string();
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .context("tensor shape")?
+            .iter()
+            .map(|d| d.as_usize().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(j.get("dtype").as_str().unwrap_or("f32"))?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SiteSpec {
+    pub name: String,
+    pub class: Class,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub file: String,
+    /// `train` | `eval` | `quantize` | `qmatmul`.
+    pub kind: String,
+    pub model: Option<String>,
+    pub batch: usize,
+    pub quantized: bool,
+    pub stochastic: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sites: Vec<SiteSpec>,
+}
+
+impl ModuleSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .with_context(|| format!("module {}: no input '{name}'", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .with_context(|| format!("module {}: no output '{name}'", self.name))
+    }
+
+    /// Indices of this module's stat-vector slots belonging to `class`.
+    pub fn site_indices(&self, class: Class) -> Vec<usize> {
+        self.sites
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.class == class)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub params: Vec<ParamSpec>,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+}
+
+impl ModelMeta {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub modules: BTreeMap<String, ModuleSpec>,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+impl Manifest {
+    pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json")?;
+        let mut modules = BTreeMap::new();
+        for (name, m) in j.get("modules").as_obj().context("modules")? {
+            let sites = m
+                .get("sites")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|s| -> Result<SiteSpec> {
+                    Ok(SiteSpec {
+                        name: s.get("name").as_str().context("site name")?.into(),
+                        class: Class::from_str(
+                            s.get("class").as_str().context("site class")?,
+                        )
+                        .context("site class value")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let parse_tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+                m.get(key)
+                    .as_arr()
+                    .with_context(|| format!("module {name}: {key}"))?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            modules.insert(
+                name.clone(),
+                ModuleSpec {
+                    name: name.clone(),
+                    file: m.get("file").as_str().context("file")?.into(),
+                    kind: m.get("kind").as_str().context("kind")?.into(),
+                    model: m.get("model").as_str().map(|s| s.to_string()),
+                    batch: m.get("batch").as_usize().unwrap_or(0),
+                    quantized: m.get("quantized").as_bool().unwrap_or(false),
+                    stochastic: m.get("stochastic").as_bool().unwrap_or(false),
+                    inputs: parse_tensors("inputs")?,
+                    outputs: parse_tensors("outputs")?,
+                    sites,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models").as_obj().context("models")? {
+            let params = m
+                .get("params")
+                .as_arr()
+                .context("model params")?
+                .iter()
+                .map(|p| -> Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: p.get("name").as_str().context("param name")?.into(),
+                        shape: p
+                            .get("shape")
+                            .as_arr()
+                            .context("param shape")?
+                            .iter()
+                            .map(|d| d.as_usize().context("dim"))
+                            .collect::<Result<Vec<_>>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    params,
+                    input_shape: m
+                        .get("input_shape")
+                        .as_arr()
+                        .context("input_shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<Vec<_>>>()?,
+                    num_classes: m.get("num_classes").as_usize().unwrap_or(10),
+                },
+            );
+        }
+        Ok(Manifest {
+            modules,
+            models,
+            train_batch: j.get("train_batch").as_usize().unwrap_or(64),
+            eval_batch: j.get("eval_batch").as_usize().unwrap_or(100),
+        })
+    }
+
+    pub fn module(&self, name: &str) -> Result<&ModuleSpec> {
+        self.modules
+            .get(name)
+            .with_context(|| format!("manifest has no module '{name}'"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .with_context(|| format!("manifest has no model '{name}'"))
+    }
+
+    /// Train-step module name for (model, rounding/float choice).
+    pub fn train_module_name(model: &str, rounding: crate::policy::Rounding) -> String {
+        match rounding {
+            crate::policy::Rounding::Stochastic => format!("{model}_train"),
+            crate::policy::Rounding::Nearest => format!("{model}_train_nearest"),
+            crate::policy::Rounding::Float => format!("{model}_train_float"),
+        }
+    }
+
+    pub fn eval_module_name(model: &str, quantized: bool) -> String {
+        if quantized {
+            format!("{model}_eval")
+        } else {
+            format!("{model}_eval_float")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "eval_batch": 100, "train_batch": 64,
+      "models": {"mlp": {"input_shape": [784], "num_classes": 10,
+        "params": [{"name": "w1", "shape": [784, 256]},
+                   {"name": "b1", "shape": [256]}]}},
+      "modules": {"mlp_train": {
+        "kind": "train", "model": "mlp", "batch": 64, "file": "mlp_train.hlo.txt",
+        "quantized": true, "stochastic": true,
+        "inputs": [{"name": "w1", "shape": [784, 256], "dtype": "f32"},
+                   {"name": "y", "shape": [64], "dtype": "i32"}],
+        "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+        "sites": [{"name": "input", "class": "act"},
+                  {"name": "g_w1", "class": "grad"},
+                  {"name": "w_w1", "class": "weight"}]}}}"#;
+
+    #[test]
+    fn parse_mini() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.train_batch, 64);
+        let spec = m.module("mlp_train").unwrap();
+        assert_eq!(spec.inputs.len(), 2);
+        assert_eq!(spec.inputs[1].dtype, DType::I32);
+        assert_eq!(spec.input_index("y").unwrap(), 1);
+        assert!(spec.input_index("nope").is_err());
+        assert_eq!(spec.site_indices(Class::Grad), vec![1]);
+        let meta = m.model("mlp").unwrap();
+        assert_eq!(meta.param_count(), 784 * 256 + 256);
+    }
+
+    #[test]
+    fn module_names() {
+        use crate::policy::Rounding;
+        assert_eq!(Manifest::train_module_name("lenet", Rounding::Stochastic),
+                   "lenet_train");
+        assert_eq!(Manifest::train_module_name("mlp", Rounding::Nearest),
+                   "mlp_train_nearest");
+        assert_eq!(Manifest::train_module_name("mlp", Rounding::Float),
+                   "mlp_train_float");
+        assert_eq!(Manifest::eval_module_name("mlp", false), "mlp_eval_float");
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = crate::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load_dir(&dir).unwrap();
+            assert!(m.modules.contains_key("lenet_train"));
+            assert!(m.models.contains_key("lenet"));
+            let spec = m.module("lenet_train").unwrap();
+            assert_eq!(spec.sites.len(), 21);
+            // prec is always the last input
+            assert_eq!(spec.inputs.last().unwrap().name, "prec");
+        }
+    }
+}

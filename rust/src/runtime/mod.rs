@@ -1,0 +1,221 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Mirrors `/opt/xla-example/load_hlo`: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  HLO *text* is the interchange format
+//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos).
+//!
+//! Executables are cached per module name, so a training run compiles its
+//! step exactly once and the hot loop is `execute` + host copies only.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+use xla::{FromRawBytes, Literal, PjRtClient, PjRtLoadedExecutable};
+
+pub use manifest::{DType, Manifest, ModelMeta, ModuleSpec, TensorSpec};
+
+/// A compiled module plus its manifest spec.
+pub struct Executable {
+    pub spec: ModuleSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional inputs (order = `spec.inputs`).
+    ///
+    /// Validates arity, unpacks the tuple result, and validates output
+    /// arity.  Returns outputs in `spec.outputs` order.
+    pub fn run<L: std::borrow::Borrow<Literal>>(&self, inputs: &[L]) -> Result<Vec<Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "module {}: got {} inputs, expected {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let bufs = self
+            .exe
+            .execute(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.spec.name))?;
+        let tuple = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.spec.name))?;
+        let outs = tuple.to_tuple().context("untupling result")?;
+        anyhow::ensure!(
+            outs.len() == self.spec.outputs.len(),
+            "module {}: got {} outputs, expected {}",
+            self.spec.name,
+            outs.len(),
+            self.spec.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Scalar f32 view of output `idx` (loss/acc readbacks).
+    pub fn out_f32(outs: &[Literal], idx: usize) -> Result<f32> {
+        Ok(outs[idx].get_first_element::<f32>()?)
+    }
+}
+
+/// The runtime: one PJRT CPU client + the manifest + an executable cache.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl Runtime {
+    /// Create from the default artifacts directory (see
+    /// [`crate::artifacts_dir`]).
+    pub fn create() -> Result<Runtime> {
+        Self::with_dir(crate::artifacts_dir())
+    }
+
+    pub fn with_dir<P: Into<PathBuf>>(dir: P) -> Result<Runtime> {
+        let dir = dir.into();
+        let manifest = Manifest::load_dir(&dir)?;
+        // Perf (EXPERIMENTS.md §Perf/L3-1): on small-core hosts the TFRT CPU
+        // client's Eigen thread pool burns more time in futex churn than it
+        // saves — multi-threaded eigen cost ~19% wall and ~6x sys time on
+        // the 1-core CI box.  Respect an explicit user setting.
+        if std::env::var_os("XLA_FLAGS").is_none() {
+            let threads = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            if threads <= 2 {
+                std::env::set_var("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false");
+            }
+        }
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
+        crate::log_debug!(
+            "runtime: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, manifest, dir, cache: HashMap::new() })
+    }
+
+    /// Load + compile a module (cached).
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.module(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let t = crate::util::Stopwatch::start();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        crate::log_info!("runtime: compiled {name} in {:.2}s", t.elapsed_s());
+        let e = std::rc::Rc::new(Executable { spec, exe });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Load a model's initial parameters from `artifacts/<model>_params.npz`
+    /// in manifest parameter order.
+    pub fn load_params(&self, model: &str) -> Result<Vec<Literal>> {
+        let meta = self.manifest.model(model)?;
+        let path = self.dir.join(format!("{model}_params.npz"));
+        let named = Literal::read_npz(&path, &())
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+        let mut by_name: HashMap<String, Literal> = named
+            .into_iter()
+            .map(|(mut n, l)| {
+                // npz entries may carry a ".npy" suffix
+                if let Some(stripped) = n.strip_suffix(".npy") {
+                    n = stripped.to_string();
+                }
+                (n, l)
+            })
+            .collect();
+        meta.params
+            .iter()
+            .map(|p| {
+                let lit = by_name
+                    .remove(&p.name)
+                    .with_context(|| format!("{path:?} missing param '{}'", p.name))?;
+                let got = lit.array_shape().map_err(|e| anyhow::anyhow!("{e}"))?;
+                let want: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                anyhow::ensure!(
+                    got.dims() == want.as_slice(),
+                    "param {}: npz shape {:?} != manifest {:?}",
+                    p.name,
+                    got.dims(),
+                    want
+                );
+                Ok(lit)
+            })
+            .collect()
+    }
+
+    /// Zero-filled literals matching the model's parameter shapes (momentum
+    /// buffers).
+    pub fn zeros_like_params(&self, model: &str) -> Result<Vec<Literal>> {
+        let meta = self.manifest.model(model)?;
+        meta.params
+            .iter()
+            .map(|p| {
+                let n: usize = p.shape.iter().product();
+                literal_f32(&vec![0.0f32; n], &p.shape)
+            })
+            .collect()
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(data.len() == n, "literal: {} elems for shape {shape:?}", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if dims.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(data.len() == n, "literal: {} elems for shape {shape:?}", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if dims.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_builders() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let s = literal_f32(&[7.5], &[]).unwrap();
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 7.5);
+        assert!(literal_f32(&[1.0], &[3]).is_err());
+        let i = literal_i32(&[1, 2], &[2]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+}

@@ -1,0 +1,166 @@
+//! Checkpointing: parameters + momentum as numpy-compatible `.npy` files,
+//! run state as JSON.
+//!
+//! The xla crate's own `write_npy`/`write_npz` are broken upstream (they
+//! `copy_raw_to::<u8>` an f32 literal, which its type check rejects), so
+//! the npy *writer* lives here; reading uses the crate's working
+//! `read_npy` path.
+//!
+//! Layout under the checkpoint dir:
+//! ```text
+//! <dir>/state-<iter>/p_<k>.npy     parameter tensors (manifest order)
+//! <dir>/state-<iter>/m_<k>.npy     momentum tensors
+//! <dir>/state-<iter>/state.json    iter, scheme, model, <IL,FL> triple
+//! <dir>/LATEST                     iter number of the newest checkpoint
+//! ```
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::{FromRawBytes, Literal};
+
+use crate::fixedpoint::Format;
+use crate::policy::PrecState;
+use crate::util::json::Json;
+
+use super::Trainer;
+
+/// Write one f32 literal as a numpy `.npy` (v1.0, C order, little-endian).
+pub fn write_npy_f32(path: &Path, lit: &Literal) -> Result<()> {
+    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let dims: Vec<String> = shape.dims().iter().map(|d| d.to_string()).collect();
+    let shape_str = match dims.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", dims[0]),
+        _ => format!("({})", dims.join(", ")),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad so magic(6)+ver(2)+len(2)+header is a multiple of 16, ending in \n
+    let base = 6 + 2 + 2;
+    let pad = 16 - (base + header.len() + 1) % 16;
+    header.push_str(&" ".repeat(pad % 16));
+    header.push('\n');
+
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(b"\x93NUMPY\x01\x00")?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for v in &data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+pub fn save(dir: &str, trainer: &Trainer, iter: u64) -> Result<()> {
+    let step_dir = Path::new(dir).join(format!("state-{iter}"));
+    std::fs::create_dir_all(&step_dir)?;
+    for (k, lit) in trainer.params().iter().enumerate() {
+        write_npy_f32(&step_dir.join(format!("p_{k}.npy")), lit)?;
+    }
+    for (k, lit) in trainer.mom().iter().enumerate() {
+        write_npy_f32(&step_dir.join(format!("m_{k}.npy")), lit)?;
+    }
+    let p = trainer.prec;
+    let state = Json::obj(vec![
+        ("iter", Json::Num(iter as f64)),
+        ("model", Json::Str(trainer.cfg.model.clone())),
+        ("scheme", Json::Str(trainer.policy.name().into())),
+        ("n_params", Json::Num(trainer.params().len() as f64)),
+        ("prec", Json::arr_f64(&p.to_vec().map(|v| v as f64))),
+    ]);
+    std::fs::write(step_dir.join("state.json"), state.to_string_pretty())?;
+    std::fs::write(Path::new(dir).join("LATEST"), iter.to_string())?;
+    crate::log_debug!("checkpoint: saved iter {iter} to {}", step_dir.display());
+    Ok(())
+}
+
+/// Restore the newest checkpoint into `trainer`; returns the next iter.
+pub fn load_latest(dir: &str, trainer: &mut Trainer) -> Result<u64> {
+    let iter: u64 = std::fs::read_to_string(Path::new(dir).join("LATEST"))
+        .context("no LATEST in checkpoint dir")?
+        .trim()
+        .parse()
+        .context("bad LATEST")?;
+    let step_dir = Path::new(dir).join(format!("state-{iter}"));
+    let text = std::fs::read_to_string(step_dir.join("state.json"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(
+        j.get("model").as_str() == Some(trainer.cfg.model.as_str()),
+        "checkpoint is for model {:?}, trainer has {}",
+        j.get("model").as_str(),
+        trainer.cfg.model
+    );
+    let n = j.get("n_params").as_usize().context("n_params")?;
+    let mut params = Vec::with_capacity(n);
+    let mut mom = Vec::with_capacity(n);
+    for k in 0..n {
+        params.push(
+            Literal::read_npy(step_dir.join(format!("p_{k}.npy")), &())
+                .map_err(|e| anyhow::anyhow!("p_{k}: {e}"))?,
+        );
+        mom.push(
+            Literal::read_npy(step_dir.join(format!("m_{k}.npy")), &())
+                .map_err(|e| anyhow::anyhow!("m_{k}: {e}"))?,
+        );
+    }
+    let pv = j.get("prec");
+    let f = |i: usize| -> Result<i32> {
+        Ok(pv.at(i).as_f64().context("prec")? as i32)
+    };
+    let prec = PrecState {
+        weights: Format::new(f(0)?, f(1)?),
+        acts: Format::new(f(2)?, f(3)?),
+        grads: Format::new(f(4)?, f(5)?),
+    };
+    trainer.restore(params, mom, prec);
+    Ok(iter + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::literal_f32;
+
+    #[test]
+    fn npy_roundtrip_shapes() {
+        let dir = std::env::temp_dir().join("qedps_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (data, shape) in [
+            (vec![1.5f32, -2.25, 3.0, 0.0], vec![2usize, 2]),
+            (vec![7.0f32], vec![] as Vec<usize>),
+            ((0..30).map(|i| i as f32).collect(), vec![2, 3, 5]),
+            (vec![0.25f32; 7], vec![7]),
+        ] {
+            let lit = literal_f32(&data, &shape).unwrap();
+            let path = dir.join("t.npy");
+            write_npy_f32(&path, &lit).unwrap();
+            let back = Literal::read_npy(&path, &()).unwrap();
+            assert_eq!(back.to_vec::<f32>().unwrap(), data, "shape {shape:?}");
+            let got = back.array_shape().unwrap();
+            let want: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            assert_eq!(got.dims(), want.as_slice());
+        }
+    }
+
+    #[test]
+    fn npy_is_numpy_compatible_header() {
+        let dir = std::env::temp_dir().join("qedps_npy_hdr");
+        std::fs::create_dir_all(&dir).unwrap();
+        let lit = literal_f32(&[1.0, 2.0], &[2]).unwrap();
+        let path = dir.join("h.npy");
+        write_npy_f32(&path, &lit).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..6], b"\x93NUMPY");
+        assert_eq!(bytes[6], 1);
+        let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + hlen) % 16, 0, "header must align to 16");
+        let header = std::str::from_utf8(&bytes[10..10 + hlen]).unwrap();
+        assert!(header.contains("'descr': '<f4'"), "{header}");
+        assert!(header.ends_with('\n'));
+    }
+}

@@ -1,0 +1,319 @@
+//! The training loop: the L3 hot path.
+//!
+//! Each iteration:
+//! 1. fill the batch buffers (no allocation),
+//! 2. execute the AOT train step with the *current* `<IL,FL>` triple as a
+//!    runtime input,
+//! 3. read back loss/acc + the per-site `(E, R)` stat vectors,
+//! 4. aggregate stats per attribute class and let the [`crate::policy`]
+//!    controller re-decide the precision for the next iteration,
+//! 5. record metrics; periodically evaluate on the test set and checkpoint.
+//!
+//! Python is never involved: the step is a compiled PJRT executable.
+
+pub mod checkpoint;
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::config::ExperimentConfig;
+use crate::data::{batcher::EvalBatcher, Batcher, Dataset};
+use crate::metrics::{EvalRecord, History, TrainRecord};
+use crate::policy::{make_policy, Class, ClassStats, Feedback, Policy, PrecState};
+use crate::runtime::{literal_f32, literal_i32, Executable, Runtime};
+use crate::util::Stopwatch;
+
+/// Owns one training run.
+pub struct Trainer {
+    pub cfg: ExperimentConfig,
+    pub policy: Box<dyn Policy>,
+    pub prec: PrecState,
+    exe_train: std::rc::Rc<Executable>,
+    exe_eval: std::rc::Rc<Executable>,
+    params: Vec<Literal>,
+    mom: Vec<Literal>,
+    n_params: usize,
+    x_shape: Vec<usize>,
+    eval_x_shape: Vec<usize>,
+    // reusable host-side batch buffers
+    x_buf: Vec<f32>,
+    y_buf: Vec<i32>,
+    ex_buf: Vec<f32>,
+    ey_buf: Vec<i32>,
+    pub history: History,
+    /// Indices of each class's slots in the stat vectors.
+    site_idx: [Vec<usize>; 3],
+    evec_len: usize,
+}
+
+impl Trainer {
+    pub fn new(rt: &mut Runtime, cfg: ExperimentConfig) -> Result<Trainer> {
+        let policy = make_policy(&cfg.scheme, &cfg.policy_options())?;
+        let rounding = match cfg.force_rounding.as_deref() {
+            Some("stochastic") => crate::policy::Rounding::Stochastic,
+            Some("nearest") => crate::policy::Rounding::Nearest,
+            Some(other) => anyhow::bail!("force_rounding must be stochastic|nearest, got {other}"),
+            None => policy.rounding(),
+        };
+        let train_name =
+            crate::runtime::Manifest::train_module_name(&cfg.model, rounding);
+        let eval_name =
+            crate::runtime::Manifest::eval_module_name(&cfg.model, !policy.is_float());
+        let exe_train = rt.load(&train_name)?;
+        let exe_eval = rt.load(&eval_name)?;
+        let params = rt.load_params(&cfg.model)?;
+        let mom = rt.zeros_like_params(&cfg.model)?;
+        let n_params = params.len();
+
+        let spec = &exe_train.spec;
+        let x_spec = &spec.inputs[spec.input_index("x")?];
+        let x_shape = x_spec.shape.clone();
+        let train_batch = x_shape[0];
+        let espec = &exe_eval.spec;
+        let eval_x_shape = espec.inputs[espec.input_index("x")?].shape.clone();
+        let eval_batch = eval_x_shape[0];
+
+        let site_idx = [
+            spec.site_indices(Class::Weight),
+            spec.site_indices(Class::Act),
+            spec.site_indices(Class::Grad),
+        ];
+        let evec_len = spec.outputs[spec.output_index("evec")?].elems();
+
+        let prec = policy.init();
+        let history = History::new(policy.name(), &cfg.model);
+        Ok(Trainer {
+            x_buf: vec![0.0; x_shape.iter().product()],
+            y_buf: vec![0; train_batch],
+            ex_buf: vec![0.0; eval_x_shape.iter().product()],
+            ey_buf: vec![0; eval_batch],
+            cfg,
+            policy,
+            prec,
+            exe_train,
+            exe_eval,
+            params,
+            mom,
+            n_params,
+            x_shape,
+            eval_x_shape,
+            history,
+            site_idx,
+            evec_len,
+        })
+    }
+
+    pub fn train_batch_size(&self) -> usize {
+        self.x_shape[0]
+    }
+
+    pub fn eval_batch_size(&self) -> usize {
+        self.eval_x_shape[0]
+    }
+
+    /// Aggregate a stat vector into per-class values with the configured
+    /// aggregation mode.
+    fn collapse(&self, vec: &[f32], class: Class) -> f32 {
+        let idx = &self.site_idx[match class {
+            Class::Weight => 0,
+            Class::Act => 1,
+            Class::Grad => 2,
+        }];
+        let vals: Vec<f32> = idx.iter().map(|&i| vec[i]).collect();
+        self.cfg.agg.collapse(&vals)
+    }
+
+    /// Run one training iteration from pre-filled batch buffers.
+    pub fn step(&mut self, iter: u64) -> Result<StepOutput> {
+        let lr = self.cfg.lr_at(iter) as f32;
+        let seed = (iter + 1) as f32;
+        let prec_vec = self.prec.to_vec();
+
+        let x = literal_f32(&self.x_buf, &self.x_shape)?;
+        let y = literal_i32(&self.y_buf, &[self.y_buf.len()])?;
+        let lr_l = Literal::scalar(lr);
+        let seed_l = Literal::scalar(seed);
+        let prec_l = literal_f32(&prec_vec, &[6])?;
+
+        let mut inputs: Vec<&Literal> =
+            Vec::with_capacity(2 * self.n_params + 5);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.mom.iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.push(&lr_l);
+        inputs.push(&seed_l);
+        inputs.push(&prec_l);
+
+        let bufs = self
+            .exe_train
+            .run(&inputs)
+            .with_context(|| format!("train step {iter}"))?;
+        let mut outs = bufs.into_iter();
+        let new_params: Vec<Literal> = (&mut outs).take(self.n_params).collect();
+        let new_mom: Vec<Literal> = (&mut outs).take(self.n_params).collect();
+        let rest: Vec<Literal> = outs.collect();
+        anyhow::ensure!(rest.len() == 4, "train step output arity");
+        let loss = rest[0].get_first_element::<f32>()?;
+        let acc = rest[1].get_first_element::<f32>()?;
+        let evec = crate::runtime::to_vec_f32(&rest[2])?;
+        let rvec = crate::runtime::to_vec_f32(&rest[3])?;
+        anyhow::ensure!(evec.len() == self.evec_len, "evec length");
+
+        self.params = new_params;
+        self.mom = new_mom;
+
+        let fb = Feedback {
+            iter,
+            loss,
+            weights: ClassStats {
+                e: self.collapse(&evec, Class::Weight),
+                r: self.collapse(&rvec, Class::Weight),
+            },
+            acts: ClassStats {
+                e: self.collapse(&evec, Class::Act),
+                r: self.collapse(&rvec, Class::Act),
+            },
+            grads: ClassStats {
+                e: self.collapse(&evec, Class::Grad),
+                r: self.collapse(&rvec, Class::Grad),
+            },
+        };
+        let prec_used = self.prec;
+        self.prec = self.policy.update(self.prec, &fb);
+        Ok(StepOutput { loss, acc, fb, prec_used })
+    }
+
+    /// Evaluate on a full dataset; returns (mean loss, accuracy).
+    pub fn evaluate(&mut self, test: &Dataset) -> Result<(f32, f32)> {
+        let batch = self.eval_batch_size();
+        let mut eb = EvalBatcher::new(test, batch);
+        let prec_l = literal_f32(&self.prec.to_vec(), &[6])?;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut total = 0usize;
+        while let Some(valid) = eb.next_into(&mut self.ex_buf, &mut self.ey_buf) {
+            // keep shapes static; the generator sizes test sets to a
+            // multiple of the eval batch, so valid == batch in practice.
+            let x = literal_f32(&self.ex_buf, &self.eval_x_shape)?;
+            let y = literal_i32(&self.ey_buf, &[batch])?;
+            let mut inputs: Vec<&Literal> = Vec::with_capacity(self.n_params + 3);
+            inputs.extend(self.params.iter());
+            inputs.push(&x);
+            inputs.push(&y);
+            inputs.push(&prec_l);
+            let outs = self.exe_eval.run(&inputs)?;
+            let scale = valid as f64 / batch as f64;
+            loss_sum += outs[0].get_first_element::<f32>()? as f64 * scale;
+            correct += outs[1].get_first_element::<f32>()? as f64 * scale;
+            total += valid;
+        }
+        Ok((
+            (loss_sum / total.max(1) as f64) as f32,
+            (correct / total.max(1) as f64) as f32,
+        ))
+    }
+
+    /// Current parameters (for checkpointing / inspection).
+    pub fn params(&self) -> &[Literal] {
+        &self.params
+    }
+
+    pub fn mom(&self) -> &[Literal] {
+        &self.mom
+    }
+
+    pub fn restore(&mut self, params: Vec<Literal>, mom: Vec<Literal>, prec: PrecState) {
+        assert_eq!(params.len(), self.n_params);
+        assert_eq!(mom.len(), self.n_params);
+        self.params = params;
+        self.mom = mom;
+        self.prec = prec;
+    }
+
+    /// Fill the training batch buffers from a batcher.
+    pub fn fill_batch(&mut self, b: &mut Batcher) {
+        b.next_into(&mut self.x_buf, &mut self.y_buf);
+    }
+}
+
+/// What one step hands back to the driver.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutput {
+    pub loss: f32,
+    pub acc: f32,
+    pub fb: Feedback,
+    /// The precision the step actually ran with (before the policy moved).
+    pub prec_used: PrecState,
+}
+
+/// Drive a full experiment: data, loop, eval, metrics, checkpoints.
+pub fn run_experiment(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<History> {
+    let mut cfg = cfg.clone();
+    let eval_batch = rt.manifest.eval_batch;
+    // size the synthetic test set to a multiple of the eval batch
+    cfg.test_n = cfg.test_n.div_ceil(eval_batch) * eval_batch;
+    let (train, test, source) = crate::data::load_default(cfg.train_n, cfg.test_n);
+    crate::log_info!(
+        "experiment: scheme={} model={} iters={} data={:?} (train={}, test={})",
+        cfg.scheme, cfg.model, cfg.iters, source, train.n, test.n
+    );
+    let mut trainer = Trainer::new(rt, cfg.clone())?;
+    let mut batcher = Batcher::new(&train, trainer.train_batch_size(), cfg.seed);
+
+    let ckpt_dir = cfg.checkpoint_dir.clone();
+    for iter in 0..cfg.iters {
+        trainer.fill_batch(&mut batcher);
+        let t = Stopwatch::start();
+        let out = trainer.step(iter)?;
+        let step_ms = t.elapsed_ms();
+
+        let last = iter + 1 == cfg.iters;
+        if cfg.log_every > 0 && (iter % cfg.log_every == 0 || last) {
+            trainer.history.train.push(TrainRecord {
+                iter,
+                loss: out.loss,
+                acc: out.acc,
+                lr: cfg.lr_at(iter),
+                prec: out.prec_used,
+                e: [out.fb.weights.e, out.fb.acts.e, out.fb.grads.e],
+                r: [out.fb.weights.r, out.fb.acts.r, out.fb.grads.r],
+                step_ms,
+            });
+            crate::log_debug!(
+                "iter {iter}: loss={:.4} acc={:.3} w={} a={} g={} ({step_ms:.1}ms)",
+                out.loss, out.acc, out.prec_used.weights, out.prec_used.acts,
+                out.prec_used.grads
+            );
+        }
+        if (cfg.eval_every > 0 && iter % cfg.eval_every == 0 && iter > 0) || last {
+            let (tl, ta) = trainer.evaluate(&test)?;
+            trainer.history.eval.push(EvalRecord {
+                iter,
+                test_loss: tl,
+                test_acc: ta,
+            });
+            crate::log_info!(
+                "iter {iter}: test_acc={ta:.4} test_loss={tl:.4} \
+                 bits(w/a/g)={}/{}/{}",
+                out.prec_used.weights.bits(),
+                out.prec_used.acts.bits(),
+                out.prec_used.grads.bits()
+            );
+        }
+        if let Some(dir) = &ckpt_dir {
+            if cfg.checkpoint_every > 0
+                && iter > 0
+                && (iter % cfg.checkpoint_every == 0 || last)
+            {
+                checkpoint::save(dir, &trainer, iter)?;
+            }
+        }
+        if !out.loss.is_finite() && trainer.policy.name() == "fixed" {
+            // the §5 divergence demonstration: record and keep going — the
+            // figure needs the whole (diverged) curve
+            crate::log_warn!("iter {iter}: loss is not finite (fixed-precision divergence)");
+        }
+    }
+    Ok(trainer.history)
+}

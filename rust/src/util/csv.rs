@@ -1,0 +1,102 @@
+//! Tiny CSV writer (and reader, for tests) used by the metric exporters.
+//! Values are written with enough precision to round-trip f64.
+
+use std::io::Write;
+use std::path::Path;
+
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", header.join(","))?;
+        Ok(Self { file, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            values.len() == self.cols,
+            "csv row has {} values, header has {}",
+            values.len(),
+            self.cols
+        );
+        let mut line = String::new();
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            if *v == v.trunc() && v.abs() < 1e15 {
+                line.push_str(&format!("{}", *v as i64));
+            } else {
+                line.push_str(&format!("{:.9}", v));
+            }
+        }
+        writeln!(self.file, "{line}")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Parse a simple (unquoted) CSV back: header + rows of f64.
+pub fn read_csv<P: AsRef<Path>>(path: P) -> anyhow::Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty csv"))?
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let mut rows = Vec::new();
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        rows.push(
+            line.split(',')
+                .map(|s| s.trim().parse::<f64>())
+                .collect::<Result<Vec<_>, _>>()?,
+        );
+    }
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("qedps_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["iter", "loss", "bits"]).unwrap();
+        w.row(&[0.0, 2.302585, 16.0]).unwrap();
+        w.row(&[1.0, 1.5, 14.0]).unwrap();
+        w.flush().unwrap();
+        drop(w);
+        let (header, rows) = read_csv(&path).unwrap();
+        assert_eq!(header, vec!["iter", "loss", "bits"]);
+        assert_eq!(rows.len(), 2);
+        assert!((rows[0][1] - 2.302585).abs() < 1e-6);
+        assert_eq!(rows[1][2], 14.0);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let dir = std::env::temp_dir().join("qedps_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        assert!(w.row(&[1.0]).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! In-repo PRNGs (the `rand` crate is unavailable offline).
+//!
+//! Two generators with different jobs:
+//!
+//! * [`Pcg32`] — fast general-purpose stream RNG for data generation,
+//!   shuffling and property-test case generation (PCG-XSH-RR 64/32,
+//!   O'Neill 2014).
+//! * [`hash_u32`] / [`uniform01`] — the *counter-based* hash that is the
+//!   specification of the L1 kernel's stochastic-rounding noise.  This must
+//!   stay bit-identical to `python/compile/kernels/quantize.py`; the parity
+//!   test `rust/tests/quantize_parity.rs` holds the two together.
+
+/// PCG-XSH-RR 64/32.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e39cb94b95bdb)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 24-bit resolution.
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire rejection-free-ish; fine for
+    /// non-cryptographic use).
+    pub fn below(&mut self, bound: u32) -> u32 {
+        ((self.next_u32() as u64 * bound as u64) >> 32) as u32
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-12 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            v.swap(i, j);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-noise hash (spec shared with the Pallas kernel)
+// ---------------------------------------------------------------------------
+
+pub const GOLDEN: u32 = 0x9E37_79B9;
+pub const MIX1: u32 = 0x85EB_CA6B;
+pub const MIX2: u32 = 0xC2B2_AE35;
+
+/// murmur3-finalizer avalanche over `idx * GOLDEN + seed`; bit-identical to
+/// `kernels/quantize.py::hash_u32`.
+#[inline]
+pub fn hash_u32(idx: u32, seed: u32) -> u32 {
+    let mut x = idx.wrapping_mul(GOLDEN).wrapping_add(seed);
+    x ^= x >> 16;
+    x = x.wrapping_mul(MIX1);
+    x ^= x >> 13;
+    x = x.wrapping_mul(MIX2);
+    x ^ (x >> 16)
+}
+
+/// U[0,1) with a 24-bit mantissa; bit-identical to
+/// `kernels/quantize.py::uniform01`.
+#[inline]
+pub fn uniform01(idx: u32, seed: u32) -> f32 {
+    (hash_u32(idx, seed) >> 8) as f32 * (1.0 / (1 << 24) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_deterministic() {
+        let mut a = Pcg32::seeded(42);
+        let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn pcg_streams_differ() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u32()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u32()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f32_in_range_and_centered() {
+        let mut r = Pcg32::seeded(7);
+        let mut sum = 0.0f64;
+        for _ in 0..10_000 {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v));
+            sum += v as f64;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Pcg32::seeded(3);
+        let mut seen0 = false;
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen0 |= v == 0;
+        }
+        assert!(seen0);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(11);
+        let (mut s, mut s2) = (0.0, 0.0);
+        let n = 20_000;
+        for _ in 0..n {
+            let v = r.normal();
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    /// Pinned vectors shared with python/tests/test_kernel.py — the hash is
+    /// a cross-language spec.
+    #[test]
+    fn hash_reference_vectors() {
+        let want: Vec<u32> = [0u32, 1, 2, 12345, 0xFFFF_FFFF]
+            .iter()
+            .map(|&i| hash_u32(i, 42))
+            .collect();
+        // recompute independently
+        fn mix(i: u64, s: u64) -> u32 {
+            let mut x = ((i * 0x9E3779B9 + s) & 0xFFFF_FFFF) as u32;
+            x ^= x >> 16;
+            x = ((x as u64 * 0x85EBCA6B) & 0xFFFF_FFFF) as u32;
+            x ^= x >> 13;
+            x = ((x as u64 * 0xC2B2AE35) & 0xFFFF_FFFF) as u32;
+            x ^ (x >> 16)
+        }
+        let alt: Vec<u32> = [0u64, 1, 2, 12345, 0xFFFF_FFFF]
+            .iter()
+            .map(|&i| mix(i, 42))
+            .collect();
+        assert_eq!(want, alt);
+    }
+
+    #[test]
+    fn uniform01_range() {
+        for i in 0..10_000u32 {
+            let u = uniform01(i, 7);
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! **The cross-language spec check**: the Rust software quantizer
+//! (`fixedpoint::quantize`) and the AOT-compiled Pallas kernel
+//! (`artifacts/quantize_*.hlo.txt`) must agree **bit-for-bit** on quantized
+//! values, and to float tolerance on the (E, R) statistics.
+//!
+//! If this passes, the three implementations of the quantizer spec — the
+//! Pallas kernel, the pure-jnp oracle (checked by pytest), and the Rust
+//! mirror — are all the same function.
+
+use qedps::fixedpoint::{quantize_slice, Format, RoundMode};
+use qedps::runtime::{literal_f32, Runtime};
+use qedps::util::rng::Pcg32;
+use xla::Literal;
+
+fn randvec(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+fn run_artifact(
+    rt: &mut Runtime,
+    module: &str,
+    x: &[f32],
+    il: i32,
+    fl: i32,
+    seed: i32,
+) -> (Vec<f32>, f32, f32) {
+    let exe = rt.load(module).expect("load artifact");
+    let n = exe.spec.inputs[0].elems();
+    assert_eq!(x.len(), n, "artifact {module} wants {n} elems");
+    let inputs = [
+        literal_f32(x, &[n]).unwrap(),
+        Literal::scalar(il),
+        Literal::scalar(fl),
+        Literal::scalar(seed),
+    ];
+    let outs = exe.run(&inputs).expect("execute");
+    (
+        outs[0].to_vec::<f32>().unwrap(),
+        outs[1].get_first_element::<f32>().unwrap(),
+        outs[2].get_first_element::<f32>().unwrap(),
+    )
+}
+
+fn check_parity(module: &str, mode: RoundMode, n: usize, scale: f32) {
+    let mut rt = Runtime::create().expect("runtime (run `make artifacts`)");
+    let x = randvec(n, scale, 0xA11CE);
+    for (il, fl, seed) in [
+        (4, 8, 1),
+        (8, 8, 42),
+        (2, 14, 7),
+        (16, 14, 12345),
+        (1, 0, 3),
+        (4, 9, 999),
+        (24, 0, 5),
+    ] {
+        let (q_hlo, e_hlo, r_hlo) = run_artifact(&mut rt, module, &x, il, fl, seed);
+        let (q_sw, stats) = quantize_slice(&x, Format::new(il, fl), seed, mode);
+        // Values: BIT-exact.
+        let mismatches: Vec<usize> = q_hlo
+            .iter()
+            .zip(&q_sw)
+            .enumerate()
+            .filter(|(_, (a, b))| a.to_bits() != b.to_bits())
+            .map(|(i, _)| i)
+            .collect();
+        assert!(
+            mismatches.is_empty(),
+            "{module} <{il},{fl}> seed {seed}: {} mismatches, first at {}: hlo={} sw={}",
+            mismatches.len(),
+            mismatches[0],
+            q_hlo[mismatches[0]],
+            q_sw[mismatches[0]]
+        );
+        // Stats: float tolerance (different summation order).
+        assert!(
+            (e_hlo - stats.e).abs() <= 1e-5 * (1.0 + stats.e.abs()),
+            "{module} <{il},{fl}>: E {e_hlo} vs {}",
+            stats.e
+        );
+        assert!(
+            (r_hlo - stats.r).abs() <= 1e-6,
+            "{module} <{il},{fl}>: R {r_hlo} vs {}",
+            stats.r
+        );
+    }
+}
+
+#[test]
+fn stochastic_parity_single_block() {
+    check_parity("quantize_sr_4096", RoundMode::Stochastic, 4096, 4.0);
+}
+
+#[test]
+fn stochastic_parity_multi_block() {
+    // 131072 = 2 kernel blocks: exercises the grid + per-block stat partials
+    check_parity("quantize_sr_131072", RoundMode::Stochastic, 131072, 4.0);
+}
+
+#[test]
+fn nearest_parity() {
+    check_parity("quantize_rn_4096", RoundMode::Nearest, 4096, 4.0);
+}
+
+#[test]
+fn parity_with_saturation() {
+    // large scale so the clip path + R stat are exercised hard
+    check_parity("quantize_sr_4096", RoundMode::Stochastic, 4096, 64.0);
+}
+
+#[test]
+fn parity_on_adversarial_values() {
+    let mut rt = Runtime::create().unwrap();
+    let mut x = vec![0.0f32; 4096];
+    let specials = [
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        0.5,
+        0.25,
+        0.3,
+        -0.3,
+        127.996,
+        -128.0,
+        1e-10,
+        -1e-10,
+        9.40234375,
+        2407.0 / 256.0,
+        31.99609375,
+        1e6,
+        -1e6,
+        f32::MIN_POSITIVE,
+    ];
+    x[..specials.len()].copy_from_slice(&specials);
+    let mut rng = Pcg32::seeded(77);
+    for v in x.iter_mut().skip(specials.len()) {
+        // mixture of magnitudes across many orders
+        let exp = -20 + rng.below(41) as i32;
+        *v = (rng.normal() as f32) * (2.0f32).powi(exp);
+    }
+    let (q_hlo, _, _) = run_artifact(&mut rt, "quantize_sr_4096", &x, 6, 10, 31337);
+    let (q_sw, _) = quantize_slice(&x, Format::new(6, 10), 31337, RoundMode::Stochastic);
+    for (i, (a, b)) in q_hlo.iter().zip(&q_sw).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "elem {i}: x={} hlo={a} sw={b}", x[i]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Runtime integration: every AOT artifact loads, compiles, executes, and
+//! produces self-consistent outputs.
+
+use qedps::policy::PrecState;
+use qedps::runtime::{literal_f32, literal_i32, Runtime};
+use qedps::util::rng::Pcg32;
+use xla::Literal;
+
+fn runtime() -> Runtime {
+    Runtime::create().expect("runtime (run `make artifacts` first)")
+}
+
+#[test]
+fn manifest_covers_all_models_and_kinds() {
+    let rt = runtime();
+    for model in ["mlp", "lenet"] {
+        for suffix in ["train", "train_nearest", "train_float", "eval", "eval_float"] {
+            let name = format!("{model}_{suffix}");
+            assert!(rt.manifest.modules.contains_key(&name), "missing {name}");
+        }
+        assert!(rt.manifest.models.contains_key(model));
+    }
+}
+
+#[test]
+fn params_load_with_manifest_shapes() {
+    let rt = runtime();
+    for model in ["mlp", "lenet"] {
+        let params = rt.load_params(model).unwrap();
+        let meta = rt.manifest.model(model).unwrap();
+        assert_eq!(params.len(), meta.params.len());
+        let total: usize = params.iter().map(|p| p.element_count()).sum();
+        assert_eq!(total, meta.param_count());
+    }
+    // LeNet parameter count is the classic 431,080
+    assert_eq!(runtime().manifest.model("lenet").unwrap().param_count(), 431_080);
+}
+
+/// One full train step through the artifact: shapes in = shapes out, loss
+/// finite, stats in range, weights actually change.
+#[test]
+fn mlp_train_step_executes() {
+    let mut rt = runtime();
+    let exe = rt.load("mlp_train").unwrap();
+    let params = rt.load_params("mlp").unwrap();
+    let mom = rt.zeros_like_params("mlp").unwrap();
+    let spec = exe.spec.clone();
+    let batch = rt.manifest.train_batch;
+
+    let mut rng = Pcg32::seeded(1);
+    let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32()).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(10) as i32).collect();
+    let prec = PrecState::default_paper();
+
+    let x_l = literal_f32(&x, &[batch, 784]).unwrap();
+    let y_l = literal_i32(&y, &[batch]).unwrap();
+    let lr = Literal::scalar(0.01f32);
+    let seed = Literal::scalar(1.0f32);
+    let prec_l = literal_f32(&prec.to_vec(), &[6]).unwrap();
+
+    let mut inputs: Vec<&Literal> = params.iter().chain(mom.iter()).collect();
+    inputs.push(&x_l);
+    inputs.push(&y_l);
+    inputs.push(&lr);
+    inputs.push(&seed);
+    inputs.push(&prec_l);
+
+    let outs = exe.run(&inputs).unwrap();
+    assert_eq!(outs.len(), spec.outputs.len());
+    let n_p = params.len();
+    // new params have original shapes and differ from the old ones
+    let w0_new = outs[0].to_vec::<f32>().unwrap();
+    let w0_old = params[0].to_vec::<f32>().unwrap();
+    assert_eq!(w0_new.len(), w0_old.len());
+    assert_ne!(w0_new, w0_old, "weights did not move");
+    let loss = outs[2 * n_p].get_first_element::<f32>().unwrap();
+    let acc = outs[2 * n_p + 1].get_first_element::<f32>().unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+    let evec = outs[2 * n_p + 2].to_vec::<f32>().unwrap();
+    let rvec = outs[2 * n_p + 3].to_vec::<f32>().unwrap();
+    assert_eq!(evec.len(), spec.sites.len());
+    assert!(evec.iter().all(|v| v.is_finite() && *v >= 0.0));
+    assert!(rvec.iter().all(|v| (0.0..=1.0).contains(v)));
+}
+
+/// Determinism: identical inputs (incl. seed) => identical outputs.
+#[test]
+fn train_step_deterministic() {
+    let mut rt = runtime();
+    let exe = rt.load("mlp_train").unwrap();
+    let params = rt.load_params("mlp").unwrap();
+    let mom = rt.zeros_like_params("mlp").unwrap();
+    let batch = rt.manifest.train_batch;
+    let mut rng = Pcg32::seeded(9);
+    let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32()).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(10) as i32).collect();
+
+    let run = |rt_exe: &qedps::runtime::Executable| -> Vec<f32> {
+        let x_l = literal_f32(&x, &[batch, 784]).unwrap();
+        let y_l = literal_i32(&y, &[batch]).unwrap();
+        let lr = Literal::scalar(0.05f32);
+        let seed = Literal::scalar(7.0f32);
+        let prec_l =
+            literal_f32(&PrecState::default_paper().to_vec(), &[6]).unwrap();
+        let mut inputs: Vec<&Literal> = params.iter().chain(mom.iter()).collect();
+        inputs.push(&x_l);
+        inputs.push(&y_l);
+        inputs.push(&lr);
+        inputs.push(&seed);
+        inputs.push(&prec_l);
+        let outs = rt_exe.run(&inputs).unwrap();
+        outs[0].to_vec::<f32>().unwrap()
+    };
+    assert_eq!(run(&exe), run(&exe));
+}
+
+/// The float artifact must be insensitive to the prec input.
+#[test]
+fn float_step_ignores_prec() {
+    let mut rt = runtime();
+    let exe = rt.load("mlp_train_float").unwrap();
+    let params = rt.load_params("mlp").unwrap();
+    let mom = rt.zeros_like_params("mlp").unwrap();
+    let batch = rt.manifest.train_batch;
+    let mut rng = Pcg32::seeded(3);
+    let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32()).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(10) as i32).collect();
+
+    let run = |prec: [f32; 6]| -> Vec<f32> {
+        let x_l = literal_f32(&x, &[batch, 784]).unwrap();
+        let y_l = literal_i32(&y, &[batch]).unwrap();
+        let lr = Literal::scalar(0.05f32);
+        let seed = Literal::scalar(7.0f32);
+        let prec_l = literal_f32(&prec, &[6]).unwrap();
+        let mut inputs: Vec<&Literal> = params.iter().chain(mom.iter()).collect();
+        inputs.push(&x_l);
+        inputs.push(&y_l);
+        inputs.push(&lr);
+        inputs.push(&seed);
+        inputs.push(&prec_l);
+        let outs = exe.run(&inputs).unwrap();
+        outs[0].to_vec::<f32>().unwrap()
+    };
+    assert_eq!(run([2.0, 14.0, 4.0, 12.0, 2.0, 20.0]), run([1.0, 1.0, 1.0, 1.0, 1.0, 1.0]));
+}
+
+/// Wrong input arity must be rejected before reaching PJRT.
+#[test]
+fn arity_validated() {
+    let mut rt = runtime();
+    let exe = rt.load("quantize_sr_4096").unwrap();
+    let x = literal_f32(&vec![0.0; 4096], &[4096]).unwrap();
+    assert!(exe.run(&[&x]).is_err());
+}
+
+/// qmatmul artifact: quantize+matmul against the Rust mirror + f64 dot.
+#[test]
+fn qmatmul_artifact_matches_mirror() {
+    use qedps::fixedpoint::{quantize_slice, Format, RoundMode};
+    let mut rt = runtime();
+    let exe = rt.load("qmatmul_256").unwrap();
+    let mut rng = Pcg32::seeded(5);
+    let a: Vec<f32> = (0..256 * 256).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..256 * 256).map(|_| rng.normal() as f32 * 0.1).collect();
+    let (il, fl, seed) = (4, 10, 21);
+
+    let inputs = [
+        literal_f32(&a, &[256, 256]).unwrap(),
+        literal_f32(&b, &[256, 256]).unwrap(),
+        literal_f32(&[il as f32, fl as f32, il as f32, fl as f32], &[4]).unwrap(),
+        Literal::scalar(seed),
+    ];
+    let outs = exe.run(&inputs).unwrap();
+    let c = outs[0].to_vec::<f32>().unwrap();
+
+    // mirror: quantize with the same global-flat-index streams, f64 matmul
+    let (qa, _) = quantize_slice(&a, Format::new(il, fl), seed, RoundMode::Stochastic);
+    let (qb, _) =
+        quantize_slice(&b, Format::new(il, fl), seed + 0x1234567, RoundMode::Stochastic);
+    // check a handful of entries exactly enough for f32 accumulation noise
+    for &(i, j) in &[(0usize, 0usize), (1, 7), (100, 200), (255, 255), (37, 0)] {
+        let want: f64 = (0..256)
+            .map(|k| qa[i * 256 + k] as f64 * qb[k * 256 + j] as f64)
+            .sum();
+        let got = c[i * 256 + j] as f64;
+        assert!(
+            (got - want).abs() < 1e-2 * (1.0 + want.abs()),
+            "c[{i},{j}] = {got}, mirror {want}"
+        );
+    }
+}
+
+trait PrecExt {
+    fn default_paper() -> PrecState;
+}
+
+impl PrecExt for PrecState {
+    fn default_paper() -> PrecState {
+        qedps::policy::PolicyOptions::default().init
+    }
+}

@@ -1,0 +1,276 @@
+//! Cross-module property tests over the Rust substrates (in-repo harness —
+//! no proptest offline): quantizer invariants, policy state machines,
+//! JSON/TOML round-trips, data pipeline, MAC-sim consistency.
+
+use qedps::fixedpoint::{quantize_slice, Format, RoundMode};
+use qedps::macsim::{self, MacUnit};
+use qedps::policy::{
+    make_policy, ClassStats, Feedback, PolicyOptions, PrecState,
+};
+use qedps::testutil::check;
+use qedps::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Quantizer properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quantizer_output_on_grid_and_in_range() {
+    check("on_grid_in_range", 0xF00D, 200, |g| {
+        let il = g.i32_in(1, 12);
+        let fl = g.i32_in(0, 12); // il+fl <= 24: grid exactly representable
+        let n = g.usize_in(1, 400);
+        let scale = g.f32_in(0.01, 50.0);
+        let x = g.vec_f32(n, scale);
+        let seed = g.i32_in(0, 1 << 30);
+        let fmt = Format::new(il, fl);
+        let mode = *g.choice(&[RoundMode::Stochastic, RoundMode::Nearest]);
+        let (q, _) = quantize_slice(&x, fmt, seed, mode);
+        let step = fmt.step();
+        for (i, &v) in q.iter().enumerate() {
+            if v < fmt.min_val() || v > fmt.max_val() {
+                return Err(format!("[{i}] {v} outside {fmt}"));
+            }
+            let scaled = (v / step) as f64;
+            if (scaled - scaled.round()).abs() > 1e-6 {
+                return Err(format!("[{i}] {v} off grid {fmt}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantizer_error_bounded_by_step() {
+    check("err_le_step", 0xBEEF, 200, |g| {
+        let il = g.i32_in(2, 10);
+        let fl = g.i32_in(0, 14);
+        let fmt = Format::new(il, fl);
+        let x = g.vec_f32(64, fmt.max_val() * 0.4);
+        let seed = g.i32_in(0, 1 << 30);
+        let (q, _) = quantize_slice(&x, fmt, seed, RoundMode::Stochastic);
+        for (&xi, &qi) in x.iter().zip(&q) {
+            if fmt.contains(xi) && (qi - xi).abs() > fmt.step() + 1e-6 {
+                return Err(format!("x={xi} q={qi} step={}", fmt.step()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantizer_idempotent() {
+    check("idempotent", 0xCAFE, 120, |g| {
+        let fmt = Format::new(g.i32_in(2, 10), g.i32_in(0, 12));
+        let x = g.vec_f32(128, 2.0);
+        let mode = *g.choice(&[RoundMode::Stochastic, RoundMode::Nearest]);
+        let (q1, _) = quantize_slice(&x, fmt, g.i32_in(0, 99999), mode);
+        let (q2, _) = quantize_slice(&q1, fmt, g.i32_in(0, 99999), mode);
+        if q1 != q2 {
+            return Err("Q(Q(x)) != Q(x)".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_widening_format_never_increases_error() {
+    check("monotone_fl", 0xAB1E, 100, |g| {
+        let il = g.i32_in(3, 8);
+        let fl = g.i32_in(0, 10);
+        let x = g.vec_f32(256, 1.0);
+        let seed = g.i32_in(0, 99999);
+        let (_, s1) = quantize_slice(&x, Format::new(il, fl), seed, RoundMode::Nearest);
+        let (_, s2) =
+            quantize_slice(&x, Format::new(il, fl + 2), seed, RoundMode::Nearest);
+        if s2.e > s1.e + 1e-7 {
+            return Err(format!("E rose: {} -> {} (fl {fl}->{})", s1.e, s2.e, fl + 2));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Policy properties
+// ---------------------------------------------------------------------------
+
+fn fb(e: f32, r: f32, loss: f32, iter: u64) -> Feedback {
+    let s = ClassStats { e, r };
+    Feedback { iter, loss, weights: s, acts: s, grads: s }
+}
+
+#[test]
+fn prop_all_policies_stay_in_legal_range() {
+    let schemes = ["qedps", "na", "courbariaux", "fixed", "fixed13", "gupta88",
+                   "schedule"];
+    check("policies_in_range", 0x9999, 150, |g| {
+        let scheme = *g.choice(&schemes);
+        let mut p = make_policy(scheme, &PolicyOptions::default()).unwrap();
+        let mut st = p.init();
+        for iter in 0..40 {
+            let f = fb(
+                g.f32_in(0.0, 0.01),
+                g.f32_in(0.0, 0.01),
+                g.f32_in(0.01, 3.0),
+                iter,
+            );
+            st = p.update(st, &f);
+            for fmt in [st.weights, st.acts, st.grads] {
+                if fmt.il < 1 || fmt.il > 24 || fmt.fl < 0 || fmt.fl > 24 {
+                    return Err(format!("{scheme}: illegal {fmt}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qedps_monotone_response() {
+    // Strictly larger-signal feedback never yields a smaller next format.
+    check("qedps_monotone", 0x1234, 150, |g| {
+        let mut p1 = make_policy("qedps", &PolicyOptions::default()).unwrap();
+        let mut p2 = make_policy("qedps", &PolicyOptions::default()).unwrap();
+        let st = PrecState::uniform(Format::new(g.i32_in(2, 20), g.i32_in(2, 20)));
+        let e = g.f32_in(0.0, 0.01);
+        let r = g.f32_in(0.0, 0.01);
+        let lo = p1.update(st, &fb(e, r, 1.0, 0));
+        let hi = p2.update(st, &fb(e * 10.0 + 0.001, r * 10.0 + 0.001, 1.0, 0));
+        if hi.weights.fl < lo.weights.fl || hi.weights.il < lo.weights.il {
+            return Err(format!("{lo:?} vs {hi:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON fuzz round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    fn gen_value(g: &mut qedps::testutil::Gen, depth: usize) -> Json {
+        let kind = if depth > 3 { g.usize_in(0, 3) } else { g.usize_in(0, 5) };
+        match kind {
+            0 => Json::Null,
+            1 => Json::Bool(g.usize_in(0, 1) == 1),
+            2 => Json::Num((g.f32_in(-1e6, 1e6) as f64 * 100.0).round() / 100.0),
+            3 => {
+                let n = g.usize_in(0, 8);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            *g.choice(&['a', 'ß', '"', '\\', '\n', '😀', 'z', ' '])
+                        })
+                        .collect(),
+                )
+            }
+            4 => {
+                let n = g.usize_in(0, 4);
+                Json::Arr((0..n).map(|_| gen_value(g, depth + 1)).collect())
+            }
+            _ => {
+                let n = g.usize_in(0, 4);
+                Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), gen_value(g, depth + 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    check("json_roundtrip", 0x7777, 300, |g| {
+        let v = gen_value(g, 0);
+        let s = v.to_string();
+        let parsed = Json::parse(&s).map_err(|e| format!("{e} in {s}"))?;
+        if parsed != v {
+            return Err(format!("{s} reparsed differently"));
+        }
+        let pretty = Json::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+        if pretty != v {
+            return Err("pretty roundtrip differs".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Data pipeline + macsim consistency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_preserves_image_label_pairing() {
+    use qedps::data::{synth, Batcher, IMG_PIXELS};
+    let ds = synth::generate(60, 17);
+    check("batcher_pairing", 0x5150, 30, |g| {
+        let bsz = g.usize_in(1, 16);
+        let mut b = Batcher::new(&ds, bsz, g.usize_in(0, 1000) as u64);
+        let mut x = vec![0.0; bsz * IMG_PIXELS];
+        let mut y = vec![0; bsz];
+        for _ in 0..5 {
+            b.next_into(&mut x, &mut y);
+            for k in 0..bsz {
+                let img = &x[k * IMG_PIXELS..(k + 1) * IMG_PIXELS];
+                // find the dataset index with identical pixels
+                let found = (0..ds.n).find(|&i| ds.image(i) == img);
+                match found {
+                    None => return Err("batch image not from dataset".into()),
+                    Some(i) => {
+                        if ds.labels[i] as i32 != y[k] {
+                            return Err(format!("label mismatch at {i}"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_macsim_cycles_monotone_in_bits() {
+    let layers = macsim::layer_costs(&[("w", vec![100usize, 50])], (28, 28), 8);
+    let unit = MacUnit::default();
+    check("macsim_monotone", 0x6006, 100, |g| {
+        let b1 = g.i32_in(2, 30);
+        let b2 = g.i32_in(2, 30);
+        let (lo, hi) = if b1 <= b2 { (b1, b2) } else { (b2, b1) };
+        let c_lo = macsim::iteration_cycles(
+            &unit,
+            &layers,
+            &PrecState::uniform(Format::new(lo / 2 + 1, lo - lo / 2 - 1)),
+        );
+        let c_hi = macsim::iteration_cycles(
+            &unit,
+            &layers,
+            &PrecState::uniform(Format::new(hi / 2 + 1, hi - hi / 2 - 1)),
+        );
+        if c_lo > c_hi {
+            return Err(format!("bits {lo}<{hi} but cycles {c_lo}>{c_hi}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Config fuzz: every generated config either applies cleanly or errors
+// without panicking.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_config_set_never_panics() {
+    let keys = ["scheme", "iters", "lr0", "e_max", "agg", "init_acts",
+                "bogus_key", "model"];
+    check("config_set", 0x3333, 200, |g| {
+        let key = *g.choice(&keys);
+        let val = match g.usize_in(0, 3) {
+            0 => format!("{}", g.i32_in(-5, 5000)),
+            1 => format!("{:.4}", g.f32_in(-1.0, 1.0)),
+            2 => "\"qedps\"".to_string(),
+            _ => format!("[{}, {}]", g.i32_in(0, 30), g.i32_in(0, 30)),
+        };
+        let mut cfg = qedps::config::ExperimentConfig::default();
+        let _ = cfg.apply_set(&format!("{key}={val}")); // must not panic
+        Ok(())
+    });
+}
