@@ -52,6 +52,27 @@ pub struct ExperimentConfig {
     /// Optional checkpoint directory.
     pub checkpoint_dir: Option<String>,
     pub checkpoint_every: u64,
+    /// Divergence watchdog master switch (only arms for policies that can
+    /// escalate — static baselines keep their divergence behaviour).
+    pub watchdog: bool,
+    /// Watchdog: trip when finite loss exceeds this multiple of its EWMA.
+    pub loss_explode_ratio: f64,
+    /// Watchdog: finite-loss observations before the ratio rule arms.
+    pub watchdog_warmup: u64,
+    /// Watchdog: per-class overflow rate considered saturating.
+    pub overflow_trip: f64,
+    /// Watchdog: consecutive saturating iterations before tripping.
+    pub overflow_window: u64,
+    /// Rollback/escalation attempts before the run aborts.
+    pub max_recoveries: u64,
+    /// Post-rollback grace, in iterations (doubles per retry).
+    pub recovery_backoff: u64,
+    /// Resume from the newest complete checkpoint in `checkpoint_dir`.
+    pub resume: bool,
+    /// Fault-injection specs (see [`crate::resilience::parse_spec`]).
+    pub faults: Vec<String>,
+    /// Seed for fault-site selection (independent of the data seed).
+    pub fault_seed: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -79,6 +100,16 @@ impl Default for ExperimentConfig {
             out_dir: "target/experiments".into(),
             checkpoint_dir: None,
             checkpoint_every: 1000,
+            watchdog: true,
+            loss_explode_ratio: 4.0,
+            watchdog_warmup: 20,
+            overflow_trip: 0.25,
+            overflow_window: 8,
+            max_recoveries: 3,
+            recovery_backoff: 50,
+            resume: false,
+            faults: Vec::new(),
+            fault_seed: 7,
         }
     }
 }
@@ -165,6 +196,32 @@ impl ExperimentConfig {
             "force_rounding" => self.force_rounding = Some(want_str()?),
             "checkpoint.dir" | "checkpoint_dir" => self.checkpoint_dir = Some(want_str()?),
             "checkpoint.every" | "checkpoint_every" => self.checkpoint_every = want_u()?,
+            "resilience.watchdog" | "watchdog" => {
+                self.watchdog = val.as_bool().context("expected bool")?
+            }
+            "resilience.loss_ratio" | "loss_explode_ratio" => {
+                self.loss_explode_ratio = want_f()?
+            }
+            "resilience.warmup" | "watchdog_warmup" => self.watchdog_warmup = want_u()?,
+            "resilience.r_trip" | "overflow_trip" => self.overflow_trip = want_f()?,
+            "resilience.r_window" | "overflow_window" => self.overflow_window = want_u()?,
+            "resilience.max_retries" | "max_recoveries" => self.max_recoveries = want_u()?,
+            "resilience.backoff" | "recovery_backoff" => self.recovery_backoff = want_u()?,
+            "resilience.resume" | "resume" => {
+                self.resume = val.as_bool().context("expected bool")?
+            }
+            "faults.inject" | "faults" => match val {
+                TomlValue::Str(s) => self.faults.push(s.clone()),
+                TomlValue::Arr(items) => {
+                    for it in items {
+                        self.faults.push(
+                            it.as_str().context("faults entries must be strings")?.into(),
+                        );
+                    }
+                }
+                _ => bail!("faults.inject takes a spec string or array of specs"),
+            },
+            "faults.seed" | "fault_seed" => self.fault_seed = want_u()?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -223,6 +280,51 @@ mod tests {
         assert_eq!(c.e_max, 0.5);
         assert_eq!(c.init_weights, Format::new(8, 8));
         assert_eq!(c.agg, AggMode::Max);
+    }
+
+    #[test]
+    fn resilience_section_parses() {
+        let doc = toml::parse(
+            r#"
+            [resilience]
+            watchdog = false
+            loss_ratio = 6.0
+            warmup = 10
+            r_trip = 0.5
+            r_window = 4
+            max_retries = 5
+            backoff = 25
+            resume = true
+            [faults]
+            inject = ["nan@12", "bitflip@3:grad"]
+            seed = 99
+            "#,
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_doc(&doc).unwrap();
+        assert!(!c.watchdog);
+        assert_eq!(c.loss_explode_ratio, 6.0);
+        assert_eq!(c.watchdog_warmup, 10);
+        assert_eq!(c.overflow_trip, 0.5);
+        assert_eq!(c.overflow_window, 4);
+        assert_eq!(c.max_recoveries, 5);
+        assert_eq!(c.recovery_backoff, 25);
+        assert!(c.resume);
+        assert_eq!(c.faults, vec!["nan@12".to_string(), "bitflip@3:grad".to_string()]);
+        assert_eq!(c.fault_seed, 99);
+    }
+
+    #[test]
+    fn fault_specs_accumulate_from_set() {
+        let mut c = ExperimentConfig::default();
+        c.apply_set("faults=\"nan@5\"").unwrap();
+        c.apply_set("faults=\"inf@9\"").unwrap();
+        assert_eq!(c.faults, vec!["nan@5".to_string(), "inf@9".to_string()]);
+        assert!(c.apply_set("faults=3").is_err());
+        assert!(c.apply_set("watchdog=1").is_err(), "watchdog wants a bool");
+        c.apply_set("watchdog=false").unwrap();
+        assert!(!c.watchdog);
     }
 
     #[test]

@@ -27,7 +27,7 @@ fn read_maybe_gz(path: &Path) -> Result<Vec<u8>> {
 
 fn be_u32(b: &[u8], off: usize) -> Result<u32> {
     if off + 4 > b.len() {
-        bail!("idx: truncated header");
+        bail!("idx: truncated header at byte {off} (file is {} bytes)", b.len());
     }
     Ok(u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]]))
 }
@@ -35,10 +35,10 @@ fn be_u32(b: &[u8], off: usize) -> Result<u32> {
 /// Parse an IDX byte buffer into (dims, data).
 pub fn parse_idx(buf: &[u8]) -> Result<(Vec<usize>, &[u8])> {
     if buf.len() < 4 || buf[0] != 0 || buf[1] != 0 {
-        bail!("idx: bad magic");
+        bail!("idx: bad magic at byte 0 (got {:02x?})", &buf[..buf.len().min(4)]);
     }
     if buf[2] != 0x08 {
-        bail!("idx: only u8 data supported (type 0x{:02x})", buf[2]);
+        bail!("idx: only u8 data supported (type 0x{:02x} at byte 2)", buf[2]);
     }
     let ndim = buf[3] as usize;
     let mut dims = Vec::with_capacity(ndim);
@@ -46,51 +46,98 @@ pub fn parse_idx(buf: &[u8]) -> Result<(Vec<usize>, &[u8])> {
         dims.push(be_u32(buf, 4 + 4 * d)? as usize);
     }
     let start = 4 + 4 * ndim;
-    let total: usize = dims.iter().product();
+    let total: usize = dims
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .with_context(|| format!("idx: dimension product overflows ({dims:?})"))?;
     if buf.len() < start + total {
-        bail!("idx: truncated data ({} < {})", buf.len() - start, total);
+        bail!(
+            "idx: truncated data at byte {start}: {} bytes present, {total} \
+             expected from dims {dims:?}",
+            buf.len() - start
+        );
     }
     Ok((dims, &buf[start..start + total]))
 }
 
 fn load_images(path: &Path) -> Result<Vec<f32>> {
     let buf = read_maybe_gz(path)?;
-    let (dims, data) = parse_idx(&buf)?;
+    let (dims, data) =
+        parse_idx(&buf).with_context(|| format!("parsing images {path:?}"))?;
     if dims.len() != 3 || dims[1] != IMG_SIDE || dims[2] != IMG_SIDE {
-        bail!("idx: expected (n,28,28) images, got {dims:?}");
+        bail!("{path:?}: expected (n,28,28) images, got {dims:?}");
     }
     Ok(data.iter().map(|&b| b as f32 / 255.0).collect())
 }
 
 fn load_labels(path: &Path) -> Result<Vec<u8>> {
     let buf = read_maybe_gz(path)?;
-    let (dims, data) = parse_idx(&buf)?;
+    let (dims, data) =
+        parse_idx(&buf).with_context(|| format!("parsing labels {path:?}"))?;
     if dims.len() != 1 {
-        bail!("idx: expected 1-d labels, got {dims:?}");
+        bail!("{path:?}: expected 1-d labels, got {dims:?}");
     }
     Ok(data.to_vec())
 }
 
-fn find(dir: &Path, names: &[&str]) -> Result<PathBuf> {
+fn find_opt(dir: &Path, names: &[&str]) -> Option<PathBuf> {
     for n in names {
         for ext in ["", ".gz"] {
             let p = dir.join(format!("{n}{ext}"));
             if p.exists() {
-                return Ok(p);
+                return Some(p);
             }
         }
     }
-    bail!("none of {names:?} found in {dir:?}")
+    None
 }
+
+fn find(dir: &Path, names: &[&str]) -> Result<PathBuf> {
+    find_opt(dir, names).with_context(|| format!("none of {names:?} found in {dir:?}"))
+}
+
+const TRAIN_IMAGES: &[&str] = &["train-images-idx3-ubyte", "train-images.idx3-ubyte"];
+const TRAIN_LABELS: &[&str] = &["train-labels-idx1-ubyte", "train-labels.idx1-ubyte"];
+const TEST_IMAGES: &[&str] = &["t10k-images-idx3-ubyte", "t10k-images.idx3-ubyte"];
+const TEST_LABELS: &[&str] = &["t10k-labels-idx1-ubyte", "t10k-labels.idx1-ubyte"];
 
 /// Load the canonical 4-file train/test pair from a directory.
 pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<(Dataset, Dataset)> {
     let dir = dir.as_ref();
-    let tr_x = load_images(&find(dir, &["train-images-idx3-ubyte", "train-images.idx3-ubyte"])?)?;
-    let tr_y = load_labels(&find(dir, &["train-labels-idx1-ubyte", "train-labels.idx1-ubyte"])?)?;
-    let te_x = load_images(&find(dir, &["t10k-images-idx3-ubyte", "t10k-images.idx3-ubyte"])?)?;
-    let te_y = load_labels(&find(dir, &["t10k-labels-idx1-ubyte", "t10k-labels.idx1-ubyte"])?)?;
+    let tr_x = load_images(&find(dir, TRAIN_IMAGES)?)?;
+    let tr_y = load_labels(&find(dir, TRAIN_LABELS)?)?;
+    let te_x = load_images(&find(dir, TEST_IMAGES)?)?;
+    let te_y = load_labels(&find(dir, TEST_LABELS)?)?;
+    if tr_x.len() != tr_y.len() * crate::data::IMG_PIXELS {
+        bail!(
+            "{dir:?}: train images/labels disagree ({} pixels vs {} labels)",
+            tr_x.len(),
+            tr_y.len()
+        );
+    }
+    if te_x.len() != te_y.len() * crate::data::IMG_PIXELS {
+        bail!(
+            "{dir:?}: test images/labels disagree ({} pixels vs {} labels)",
+            te_x.len(),
+            te_y.len()
+        );
+    }
     Ok((Dataset::new(tr_x, tr_y), Dataset::new(te_x, te_y)))
+}
+
+/// Distinguish "MNIST is absent" (`Ok(None)` — the normal offline case)
+/// from "MNIST is present but unreadable" (`Err` — the caller should warn
+/// loudly before falling back, since training silently on synthetic data
+/// when the user staged real MNIST would invalidate their run).
+pub fn try_load_dir<P: AsRef<Path>>(dir: P) -> Result<Option<(Dataset, Dataset)>> {
+    let dir = dir.as_ref();
+    let any_present = [TRAIN_IMAGES, TRAIN_LABELS, TEST_IMAGES, TEST_LABELS]
+        .iter()
+        .any(|names| find_opt(dir, names).is_some());
+    if !any_present {
+        return Ok(None);
+    }
+    load_dir(dir).map(Some)
 }
 
 /// Serialize a dataset back to IDX (used by tests and `repro gen-data`).
@@ -149,6 +196,59 @@ mod tests {
         for (a, b) in train.images.iter().zip(&ds.images) {
             assert!((a - b).abs() <= 0.5 / 255.0 + 1e-6);
         }
+    }
+
+    #[test]
+    fn try_load_distinguishes_absent_from_unreadable() {
+        // absent: directory doesn't exist at all
+        let absent = std::env::temp_dir().join("qedps_mnist_no_such_dir");
+        let _ = std::fs::remove_dir_all(&absent);
+        assert!(try_load_dir(&absent).unwrap().is_none());
+
+        // absent: directory exists but holds no IDX files
+        let empty = std::env::temp_dir().join("qedps_mnist_empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(try_load_dir(&empty).unwrap().is_none());
+
+        // unreadable: a train-images file exists but is garbage
+        let bad = std::env::temp_dir().join("qedps_mnist_bad");
+        std::fs::create_dir_all(&bad).unwrap();
+        std::fs::write(bad.join("train-images-idx3-ubyte"), b"not idx").unwrap();
+        let err = try_load_dir(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("train-images"), "{err:#}");
+
+        // partial: images present, labels missing — also an error, not a
+        // silent fallback
+        let partial = std::env::temp_dir().join("qedps_mnist_partial");
+        let _ = std::fs::remove_dir_all(&partial);
+        std::fs::create_dir_all(&partial).unwrap();
+        let ds = synth::generate(4, 11);
+        write_idx_images(&partial.join("train-images-idx3-ubyte"), &ds).unwrap();
+        assert!(try_load_dir(&partial).is_err());
+    }
+
+    #[test]
+    fn try_load_accepts_complete_set() {
+        let ds = synth::generate(8, 5);
+        let dir = std::env::temp_dir().join("qedps_mnist_ok");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_idx_images(&dir.join("train-images-idx3-ubyte"), &ds).unwrap();
+        write_idx_labels(&dir.join("train-labels-idx1-ubyte"), &ds).unwrap();
+        write_idx_images(&dir.join("t10k-images-idx3-ubyte"), &ds).unwrap();
+        write_idx_labels(&dir.join("t10k-labels-idx1-ubyte"), &ds).unwrap();
+        let (train, _test) = try_load_dir(&dir).unwrap().expect("complete set loads");
+        assert_eq!(train.n, 8);
+    }
+
+    #[test]
+    fn parse_rejects_dim_overflow() {
+        // three dims whose product overflows even 64-bit usize
+        let mut buf = vec![0u8, 0, 0x08, 3];
+        for _ in 0..3 {
+            buf.extend(u32::MAX.to_be_bytes());
+        }
+        let err = parse_idx(&buf).unwrap_err();
+        assert!(format!("{err:#}").contains("overflow"), "{err:#}");
     }
 
     #[test]

@@ -53,16 +53,26 @@ pub enum Source {
 }
 
 /// Load train/test sets: real MNIST if present, synthetic otherwise.
+///
+/// "Present but unreadable" (corrupt/truncated/partial IDX files) is warned
+/// about loudly before falling back — a run that silently trained on
+/// synthetic digits when the user staged real MNIST would be misleading.
 pub fn load_default(train_n: usize, test_n: usize) -> (Dataset, Dataset, Source) {
     let dir = std::env::var("MNIST_DIR").unwrap_or_else(|_| "data/mnist".into());
-    if let Ok(pair) = mnist::load_dir(&dir) {
-        crate::log_info!("data: using MNIST from {dir}");
-        return (pair.0, pair.1, Source::Mnist(dir));
+    match mnist::try_load_dir(&dir) {
+        Ok(Some(pair)) => {
+            crate::log_info!("data: using MNIST from {dir}");
+            return (pair.0, pair.1, Source::Mnist(dir));
+        }
+        Ok(None) => crate::log_info!("data: MNIST not found at {dir}"),
+        Err(e) => crate::log_warn!(
+            "data: MNIST at {dir} is present but unreadable ({e:#}); \
+             falling back to synthetic digits"
+        ),
     }
     let seed = 2018;
     crate::log_info!(
-        "data: MNIST not found at {dir}; generating synthetic digits \
-         (train={train_n}, test={test_n}, seed={seed})"
+        "data: generating synthetic digits (train={train_n}, test={test_n}, seed={seed})"
     );
     let train = synth::generate(train_n, seed);
     let test = synth::generate(test_n, seed + 1);

@@ -12,5 +12,5 @@ pub mod arith;
 pub mod format;
 pub mod quantize;
 
-pub use format::Format;
+pub use format::{Format, FL_RANGE, IL_RANGE};
 pub use quantize::{quantize_slice, quantize_slice_at, QuantStats, RoundMode};

@@ -19,6 +19,8 @@
 //!   (turns measured bit-width trajectories into hardware speedup);
 //! * [`coordinator`] — experiment drivers that regenerate every figure and
 //!   table in the paper;
+//! * [`resilience`] — divergence watchdog, fault injection, retry/backoff
+//!   and failure reporting (the run-survival layer around [`trainer`]);
 //! * [`util`], [`config`], [`cli`], [`metrics`], [`bench`], [`testutil`] —
 //!   in-repo substrates (JSON, TOML-subset config, CLI, CSV, RNG,
 //!   micro-bench and property-test harnesses); the offline crate set has no
@@ -26,6 +28,31 @@
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python invocation, and the `repro` binary is self-contained afterwards.
+//!
+//! ## Fault tolerance
+//!
+//! Training at the edge of divergence is the paper's operating point, so
+//! the driver assumes runs *will* occasionally fall off it:
+//!
+//! * **Crash-safe checkpoints** — [`trainer::checkpoint`] stages each
+//!   checkpoint in a temp dir, fsyncs, renames atomically, and stores an
+//!   FNV-1a checksum in `state.json`; resume scans for the newest
+//!   checkpoint that validates, so a torn or corrupt write is skipped, not
+//!   fatal.
+//! * **Divergence watchdog** — [`resilience::Watchdog`] trips on
+//!   non-finite loss, loss explosion vs a running baseline, or a sustained
+//!   overflow rate; the driver then rolls back to the last good
+//!   checkpoint, widens precision via [`policy::Policy::escalate`], and
+//!   replays deterministically, with a bounded retry budget and
+//!   exponential post-rollback grace.  Static baselines opt out
+//!   ([`policy::Policy::can_escalate`]): their divergence is the §5
+//!   experiment.
+//! * **Fault injection** — `--fault nan@N | inf@N | bitflip@N[:class] |
+//!   read-fail[:N]` ([`resilience::FaultInjector`]) exercises all of the
+//!   above deterministically; see `examples/fault_recovery.rs`.
+//! * **Structured failure reports** — exhausting the retry budget writes
+//!   `failure_report.json` ([`resilience::FailureReport`]) with the full
+//!   recovery-event trail instead of dying silently.
 
 pub mod bench;
 pub mod cli;
@@ -36,6 +63,7 @@ pub mod fixedpoint;
 pub mod macsim;
 pub mod metrics;
 pub mod policy;
+pub mod resilience;
 pub mod runtime;
 pub mod testutil;
 pub mod trainer;

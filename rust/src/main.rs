@@ -32,8 +32,15 @@ const SPEC: Spec = Spec {
         ("n", "N", "sample count (for `gen-data`)"),
         ("agg", "mean|max|last", "stat aggregation across sites"),
         ("checkpoint-dir", "DIR", "save checkpoints here"),
+        ("fault", "SPEC", "inject a fault: nan@N|inf@N|bitflip@N[:weight|grad]|read-fail[:N] (repeatable)"),
+        ("fault-seed", "N", "seed for fault-site selection"),
     ],
-    switches: &[("help", "show usage"), ("quiet", "warnings only")],
+    switches: &[
+        ("help", "show usage"),
+        ("quiet", "warnings only"),
+        ("resume", "resume from the newest complete checkpoint"),
+        ("no-watchdog", "disable the divergence watchdog"),
+    ],
 };
 
 fn build_config(args: &Args) -> Result<ExperimentConfig> {
@@ -56,6 +63,20 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(d) = args.flag("checkpoint-dir") {
         cfg.checkpoint_dir = Some(d.into());
+    }
+    for spec in args.flag_all("fault") {
+        // fail fast on typos instead of mid-run
+        qedps::resilience::parse_spec(spec)?;
+        cfg.faults.push(spec.clone());
+    }
+    if let Some(s) = args.flag_parse::<u64>("fault-seed")? {
+        cfg.fault_seed = s;
+    }
+    if args.switch("resume") {
+        cfg.resume = true;
+    }
+    if args.switch("no-watchdog") {
+        cfg.watchdog = false;
     }
     for kv in args.flag_all("set") {
         cfg.apply_set(kv)?;
@@ -93,6 +114,11 @@ fn main() -> Result<()> {
             println!("mean bits (w/a/g): {:.1} / {:.1} / {:.1}",
                      s.mean_weight_bits, s.mean_act_bits, s.mean_grad_bits);
             println!("mean step time : {:.1} ms", s.mean_step_ms);
+            println!("status         : {}", s.status.as_str());
+            if s.recoveries > 0 {
+                println!("recoveries     : {} (see summary JSON for the event trail)",
+                         s.recoveries);
+            }
             println!("records under  : {}", cfg.out_dir);
         }
         "figures" => {

@@ -29,6 +29,24 @@ pub struct EvalRecord {
     pub test_acc: f32,
 }
 
+/// One resilience action taken during the run (watchdog trip + rollback,
+/// injected fault, resume, abort) — exported alongside the summary so
+/// recoveries are auditable after the fact.
+#[derive(Debug, Clone)]
+pub struct RecoveryEvent {
+    /// Iteration at which the event fired.
+    pub iter: u64,
+    /// Stable tag: `non_finite_loss`, `loss_explosion`, `sustained_overflow`,
+    /// `fault_loss`, `fault_bitflip`, `resume`, `abort`.
+    pub kind: String,
+    /// Human-readable description.
+    pub detail: String,
+    /// Iteration the run rewound to, when this event rolled the run back
+    /// (`None` for purely informational events: injected faults, resume,
+    /// abort).
+    pub rollback_to: Option<u64>,
+}
+
 /// Full history of a run.
 #[derive(Debug, Clone, Default)]
 pub struct History {
@@ -36,13 +54,38 @@ pub struct History {
     pub model: String,
     pub train: Vec<TrainRecord>,
     pub eval: Vec<EvalRecord>,
+    pub recovery: Vec<RecoveryEvent>,
+}
+
+/// How a run ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunStatus {
+    /// Trained to the end with a finite final loss.
+    Ok,
+    /// No training iterations were recorded (e.g. aborted before step 1).
+    Incomplete,
+    /// The final recorded loss is non-finite.
+    Diverged,
+}
+
+impl RunStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RunStatus::Ok => "ok",
+            RunStatus::Incomplete => "incomplete",
+            RunStatus::Diverged => "diverged",
+        }
+    }
 }
 
 /// The numbers the paper's abstract quotes (avg bit-widths + accuracy).
 #[derive(Debug, Clone)]
 pub struct RunSummary {
+    pub status: RunStatus,
     pub final_test_acc: f32,
     pub best_test_acc: f32,
+    /// Meaningful only when `status != Incomplete` (0.0 on an empty run —
+    /// the status field, not a NaN sentinel, marks the run incomplete).
     pub final_train_loss: f32,
     pub mean_weight_bits: f64,
     pub mean_act_bits: f64,
@@ -51,6 +94,8 @@ pub struct RunSummary {
     pub min_act_bits: i32,
     pub mean_step_ms: f64,
     pub iters: u64,
+    /// Watchdog rollbacks performed during the run.
+    pub recoveries: u64,
 }
 
 impl History {
@@ -63,14 +108,20 @@ impl History {
         let mean = |f: &dyn Fn(&TrainRecord) -> f64| -> f64 {
             self.train.iter().map(|r| f(r)).sum::<f64>() / n
         };
+        let status = match self.train.last() {
+            None => RunStatus::Incomplete,
+            Some(r) if !r.loss.is_finite() => RunStatus::Diverged,
+            Some(_) => RunStatus::Ok,
+        };
         RunSummary {
+            status,
             final_test_acc: self.eval.last().map(|e| e.test_acc).unwrap_or(0.0),
             best_test_acc: self
                 .eval
                 .iter()
                 .map(|e| e.test_acc)
                 .fold(0.0, f32::max),
-            final_train_loss: self.train.last().map(|r| r.loss).unwrap_or(f32::NAN),
+            final_train_loss: self.train.last().map(|r| r.loss).unwrap_or(0.0),
             mean_weight_bits: mean(&|r| r.prec.weights.bits() as f64),
             mean_act_bits: mean(&|r| r.prec.acts.bits() as f64),
             mean_grad_bits: mean(&|r| r.prec.grads.bits() as f64),
@@ -88,7 +139,35 @@ impl History {
                 .unwrap_or(0),
             mean_step_ms: mean(&|r| r.step_ms),
             iters: self.train.last().map(|r| r.iter + 1).unwrap_or(0),
+            recoveries: self
+                .recovery
+                .iter()
+                .filter(|e| e.rollback_to.is_some())
+                .count() as u64,
         }
+    }
+
+    /// The recovery-event trail as a JSON array (also embedded in
+    /// [`Self::summary_json`] and in failure reports).
+    pub fn recovery_json(&self) -> Json {
+        Json::Arr(
+            self.recovery
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("iter", Json::Num(e.iter as f64)),
+                        ("kind", Json::Str(e.kind.clone())),
+                        ("detail", Json::Str(e.detail.clone())),
+                        (
+                            "rollback_to",
+                            e.rollback_to
+                                .map(|i| Json::Num(i as f64))
+                                .unwrap_or(Json::Null),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
     }
 
     /// Figure-3 / figure-4 CSV: one row per logged iteration.
@@ -142,6 +221,7 @@ impl History {
         Json::obj(vec![
             ("scheme", Json::Str(self.scheme.clone())),
             ("model", Json::Str(self.model.clone())),
+            ("status", Json::Str(s.status.as_str().into())),
             ("iters", Json::Num(s.iters as f64)),
             ("final_test_acc", Json::Num(s.final_test_acc as f64)),
             ("best_test_acc", Json::Num(s.best_test_acc as f64)),
@@ -152,6 +232,8 @@ impl History {
             ("min_weight_bits", Json::Num(s.min_weight_bits as f64)),
             ("min_act_bits", Json::Num(s.min_act_bits as f64)),
             ("mean_step_ms", Json::Num(s.mean_step_ms)),
+            ("recoveries", Json::Num(s.recoveries as f64)),
+            ("recovery_events", self.recovery_json()),
         ])
     }
 }
@@ -211,5 +293,57 @@ mod tests {
         let j = h.summary_json();
         assert!(j.get("mean_weight_bits").as_f64().is_some());
         assert_eq!(j.get("scheme").as_str(), Some("qedps"));
+        assert_eq!(j.get("status").as_str(), Some("ok"));
+    }
+
+    #[test]
+    fn empty_run_is_incomplete_not_nan() {
+        let h = History::new("qedps", "lenet");
+        let s = h.summary();
+        assert_eq!(s.status, RunStatus::Incomplete);
+        assert!(s.final_train_loss.is_finite(), "no NaN sentinel");
+        let j = h.summary_json();
+        assert_eq!(j.get("status").as_str(), Some("incomplete"));
+        assert_eq!(j.get("final_train_loss").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn non_finite_final_loss_is_diverged() {
+        let mut h = History::new("fixed", "mlp");
+        let mut r = rec(0, 13);
+        r.loss = f32::NAN;
+        h.train.push(r);
+        assert_eq!(h.summary().status, RunStatus::Diverged);
+        assert_eq!(h.summary_json().get("status").as_str(), Some("diverged"));
+    }
+
+    #[test]
+    fn recovery_events_export_and_count() {
+        let mut h = History::new("qedps", "mlp");
+        h.train.push(rec(0, 16));
+        h.recovery.push(RecoveryEvent {
+            iter: 3,
+            kind: "fault_loss".into(),
+            detail: "injected NaN".into(),
+            rollback_to: None,
+        });
+        h.recovery.push(RecoveryEvent {
+            iter: 3,
+            kind: "non_finite_loss".into(),
+            detail: "loss is not finite (NaN)".into(),
+            rollback_to: Some(0),
+        });
+        let s = h.summary();
+        assert_eq!(s.recoveries, 1, "only rollbacks count as recoveries");
+        let j = h.summary_json();
+        assert_eq!(j.get("recoveries").as_f64(), Some(1.0));
+        let ev = j.get("recovery_events");
+        assert_eq!(ev.at(0).get("kind").as_str(), Some("fault_loss"));
+        assert!(ev.at(0).get("rollback_to").is_null());
+        assert_eq!(ev.at(1).get("rollback_to").as_f64(), Some(0.0));
+        // survives a JSON round-trip
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back.get("recovery_events").at(1).get("kind").as_str(),
+                   Some("non_finite_loss"));
     }
 }

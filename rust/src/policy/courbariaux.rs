@@ -69,6 +69,21 @@ impl Policy for CourbariauxPolicy {
     fn rounding(&self) -> Rounding {
         Rounding::Nearest
     }
+
+    /// Courbariaux shares one word length across classes, so escalation
+    /// grows the width itself (the radix keeps tracking overflow as usual).
+    fn escalate(&mut self, current: PrecState, _class: Option<Class>) -> PrecState {
+        self.width = (self.width + 2).min(crate::fixedpoint::IL_RANGE.1);
+        let fit = |f: Format| {
+            let il = (f.il + 1).clamp(1, self.width - 1);
+            Format::new(il, self.width - il)
+        };
+        PrecState {
+            weights: fit(current.weights),
+            acts: fit(current.acts),
+            grads: fit(current.grads),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -4,7 +4,7 @@
 //! formats, and the §5 "naive 13-bit diverges" demonstration (`fixed13` in
 //! the factory = `<4,9>` weights/acts).
 
-use super::{Feedback, Policy, PrecState, Rounding};
+use super::{Class, Feedback, Policy, PrecState, Rounding};
 
 #[derive(Debug, Clone)]
 pub struct FixedPolicy {
@@ -32,6 +32,25 @@ impl Policy for FixedPolicy {
 
     fn rounding(&self) -> Rounding {
         Rounding::Stochastic
+    }
+
+    /// Divergence under a too-narrow static format is the §5 experiment —
+    /// the watchdog must not rescue it.
+    fn can_escalate(&self) -> bool {
+        false
+    }
+
+    /// If escalated explicitly anyway, widen the stored format so the
+    /// change survives `update` (which always returns `self.state`).
+    fn escalate(&mut self, _current: PrecState, class: Option<Class>) -> PrecState {
+        use crate::fixedpoint::Format;
+        for c in [Class::Weight, Class::Act, Class::Grad] {
+            if class.map(|t| t == c).unwrap_or(true) {
+                let f = self.state.get(c);
+                self.state.set(c, Format::new(f.il + 2, f.fl + 2).clamped());
+            }
+        }
+        self.state
     }
 }
 

@@ -98,6 +98,22 @@ impl Policy for FlexpointPolicy {
         // it with stochastic rounding like the rest of the repo.
         Rounding::Stochastic
     }
+
+    /// Grow the shared word length and restart the clean-streak clocks so
+    /// the reclaim rule cannot immediately undo the escalation.
+    fn escalate(&mut self, current: PrecState, _class: Option<Class>) -> PrecState {
+        self.width = (self.width + 2).min(crate::fixedpoint::IL_RANGE.1);
+        self.streak = [0; 3];
+        let fit = |f: Format| {
+            let il = (f.il + 1).clamp(1, self.width - 1);
+            Format::new(il, self.width - il)
+        };
+        PrecState {
+            weights: fit(current.weights),
+            acts: fit(current.acts),
+            grads: fit(current.grads),
+        }
+    }
 }
 
 #[cfg(test)]

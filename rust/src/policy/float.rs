@@ -34,6 +34,15 @@ impl Policy for FloatPolicy {
     fn is_float(&self) -> bool {
         true
     }
+
+    /// fp32 has nowhere to escalate to (and `prec` is ignored anyway).
+    fn can_escalate(&self) -> bool {
+        false
+    }
+
+    fn escalate(&mut self, current: PrecState, _class: Option<super::Class>) -> PrecState {
+        current
+    }
 }
 
 #[cfg(test)]

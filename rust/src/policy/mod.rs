@@ -158,6 +158,30 @@ pub trait Policy: Send {
     fn is_float(&self) -> bool {
         false
     }
+
+    /// Whether the divergence watchdog may escalate this policy after a
+    /// rollback.  Static baselines (`fixed`, `fixed13`, `float`) return
+    /// false: their divergence behaviour *is* the experiment (the paper's
+    /// §5 naive-13-bit demonstration), so the watchdog stays disarmed.
+    fn can_escalate(&self) -> bool {
+        true
+    }
+
+    /// Recovery hook: widen precision after a watchdog trip.  `class`
+    /// names the overflowing attribute class when the trip identified one;
+    /// `None` widens every class.  Policies that hold internal width state
+    /// (target word lengths, fixed widths, schedules) override this so the
+    /// widening sticks across subsequent `update` calls.
+    fn escalate(&mut self, current: PrecState, class: Option<Class>) -> PrecState {
+        let mut next = current;
+        for c in [Class::Weight, Class::Act, Class::Grad] {
+            if class.map(|t| t == c).unwrap_or(true) {
+                let f = current.get(c);
+                next.set(c, Format::new(f.il + 2, f.fl + 2).clamped());
+            }
+        }
+        next
+    }
 }
 
 /// How per-site stats collapse into the per-class scalars.
@@ -287,5 +311,74 @@ mod tests {
         let p = make_policy("fixed13", &PolicyOptions::default()).unwrap();
         assert_eq!(p.init().weights.bits(), 13);
         assert_eq!(p.init().acts.bits(), 13);
+    }
+
+    #[test]
+    fn static_baselines_refuse_escalation() {
+        let opts = PolicyOptions::default();
+        for s in ["fixed", "fixed13", "gupta88", "float"] {
+            assert!(!make_policy(s, &opts).unwrap().can_escalate(), "{s}");
+        }
+        for s in ["qedps", "na", "courbariaux", "flexpoint", "schedule"] {
+            assert!(make_policy(s, &opts).unwrap().can_escalate(), "{s}");
+        }
+    }
+
+    #[test]
+    fn escalation_widens_and_survives_update() {
+        // For every escalatable scheme: escalate must widen the mean word
+        // length, and one subsequent update must not shrink it back below
+        // the pre-escalation width (the rollback would be pointless).
+        let opts = PolicyOptions::default();
+        let calm = Feedback {
+            iter: 0,
+            loss: 1.0,
+            weights: ClassStats { e: 1e-6, r: 0.0 },
+            acts: ClassStats { e: 1e-6, r: 0.0 },
+            grads: ClassStats { e: 1e-6, r: 0.0 },
+        };
+        for s in ["qedps", "na", "courbariaux", "flexpoint", "schedule"] {
+            let mut p = make_policy(s, &opts).unwrap();
+            let before = p.init();
+            let widened = p.escalate(before, None);
+            assert!(
+                widened.mean_bits() > before.mean_bits(),
+                "{s}: {} -> {}",
+                before.mean_bits(),
+                widened.mean_bits()
+            );
+            let after = p.update(widened, &calm);
+            assert!(
+                after.mean_bits() + 1.0 > before.mean_bits(),
+                "{s}: update undid escalation ({} -> {})",
+                widened.mean_bits(),
+                after.mean_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn class_targeted_escalation_leaves_others_alone() {
+        let opts = PolicyOptions::default();
+        let mut p = make_policy("qedps", &opts).unwrap();
+        let before = p.init();
+        let widened = p.escalate(before, Some(Class::Grad));
+        assert!(widened.grads.bits() > before.grads.bits());
+        assert_eq!(widened.weights, before.weights);
+        assert_eq!(widened.acts, before.acts);
+    }
+
+    #[test]
+    fn escalation_saturates_at_format_cap() {
+        let opts = PolicyOptions::default();
+        let mut p = make_policy("qedps", &opts).unwrap();
+        let mut st = p.init();
+        for _ in 0..40 {
+            st = p.escalate(st, None);
+        }
+        for f in [st.weights, st.acts, st.grads] {
+            assert!(f.il <= crate::fixedpoint::IL_RANGE.1);
+            assert!(f.fl <= crate::fixedpoint::FL_RANGE.1);
+        }
     }
 }

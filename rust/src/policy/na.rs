@@ -117,6 +117,26 @@ impl Policy for NaPolicy {
     fn rounding(&self) -> Rounding {
         Rounding::Nearest
     }
+
+    /// Raise the target word length(s) by the unit step (Na's own response
+    /// to instability) and restart the stagnation detector.
+    fn escalate(&mut self, current: PrecState, class: Option<Class>) -> PrecState {
+        self.losses.clear();
+        self.prev_window_mean = None;
+        let mut next = current;
+        for (i, c) in [Class::Weight, Class::Act, Class::Grad]
+            .into_iter()
+            .enumerate()
+        {
+            if class.map(|t| t == c).unwrap_or(true) {
+                self.tl[i] = (self.tl[i] + self.step).min(self.ml);
+                let f = current.get(c);
+                let il = (f.il + 1).clamp(1, self.tl[i].max(2) - 1);
+                next.set(c, Format::new(il, (self.tl[i] - il).max(0)).clamped());
+            }
+        }
+        next
+    }
 }
 
 #[cfg(test)]

@@ -42,6 +42,22 @@ impl Policy for SchedulePolicy {
     fn rounding(&self) -> Rounding {
         Rounding::Stochastic
     }
+
+    /// Widen the schedule's base formats — `update` rebuilds from
+    /// `self.init` every iteration, so widening only `current` would be
+    /// silently undone one step later.
+    fn escalate(&mut self, current: PrecState, class: Option<Class>) -> PrecState {
+        let mut next = current;
+        for c in [Class::Weight, Class::Act, Class::Grad] {
+            if class.map(|t| t == c).unwrap_or(true) {
+                let f = self.init.get(c);
+                self.init.set(c, Format::new(f.il + 2, f.fl + 2).clamped());
+                let cur = current.get(c);
+                next.set(c, Format::new(cur.il + 2, cur.fl + 2).clamped());
+            }
+        }
+        next
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,242 @@
+//! Deterministic fault injection: exercise the recovery path on purpose.
+//!
+//! Faults are declared as compact spec strings (CLI `--fault`, config
+//! `faults.inject = [..]`) and applied by the training driver at exact
+//! iterations, seeded through the repo's own [`Pcg32`] so every injected
+//! corruption is reproducible:
+//!
+//! | spec                         | effect                                        |
+//! |------------------------------|-----------------------------------------------|
+//! | `nan@ITER`                   | force the observed loss to NaN at `ITER`      |
+//! | `inf@ITER`                   | force the observed loss to +Inf at `ITER`     |
+//! | `bitflip@ITER[:weight\|grad]`| flip one exponent bit in a stored tensor      |
+//! | `read-fail[:N]`              | fail the next `N` guarded reads (default 1)   |
+//!
+//! `bitflip` targets host-resident state: `weight` flips a parameter
+//! tensor, `grad` flips a momentum tensor (activations are
+//! device-transient and cannot be corrupted from L3; asking for
+//! `bitflip@N:act` is a spec error).  Scheduled faults are **one-shot**:
+//! after a rollback re-executes the same iteration the fault does not fire
+//! again, so a bounded retry budget always converges.
+
+use anyhow::{bail, Context, Result};
+
+use crate::policy::Class;
+use crate::util::rng::Pcg32;
+
+/// One scheduled fault (parsed from a spec string).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    NanLoss { at: u64 },
+    InfLoss { at: u64 },
+    BitFlip { at: u64, class: Class },
+    ReadFail { count: u32 },
+}
+
+/// Parse one spec string (see module docs for the grammar).
+pub fn parse_spec(spec: &str) -> Result<Fault> {
+    let (head, tail) = match spec.split_once('@') {
+        Some((h, t)) => (h, Some(t)),
+        None => (spec, None),
+    };
+    match head {
+        "nan" => {
+            let at = parse_iter(spec, tail)?;
+            Ok(Fault::NanLoss { at })
+        }
+        "inf" => {
+            let at = parse_iter(spec, tail)?;
+            Ok(Fault::InfLoss { at })
+        }
+        "bitflip" => {
+            let tail = tail.with_context(|| format!("'{spec}': bitflip needs @ITER"))?;
+            let (it, class) = match tail.split_once(':') {
+                Some((it, "weight")) => (it, Class::Weight),
+                Some((it, "grad")) => (it, Class::Grad),
+                Some((_, "act")) => bail!(
+                    "'{spec}': activations are device-transient; flip 'weight' or 'grad'"
+                ),
+                Some((_, other)) => bail!("'{spec}': unknown class '{other}'"),
+                None => (tail, Class::Weight),
+            };
+            let at = it.parse().with_context(|| format!("'{spec}': bad iteration"))?;
+            Ok(Fault::BitFlip { at, class })
+        }
+        _ if head.starts_with("read-fail") => {
+            let count = match head.strip_prefix("read-fail") {
+                Some("") => 1,
+                Some(rest) => rest
+                    .strip_prefix(':')
+                    .and_then(|n| n.parse().ok())
+                    .with_context(|| format!("'{spec}': read-fail[:N]"))?,
+                None => unreachable!(),
+            };
+            Ok(Fault::ReadFail { count })
+        }
+        other => bail!(
+            "unknown fault '{other}' in '{spec}' \
+             (nan@N | inf@N | bitflip@N[:weight|grad] | read-fail[:N])"
+        ),
+    }
+}
+
+fn parse_iter(spec: &str, tail: Option<&str>) -> Result<u64> {
+    tail.with_context(|| format!("'{spec}': needs @ITER"))?
+        .parse()
+        .with_context(|| format!("'{spec}': bad iteration"))
+}
+
+/// Holds the fault plan plus the seeded RNG that picks corruption sites.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    rng: Pcg32,
+    faults: Vec<Fault>,
+    /// Remaining guarded reads to fail (sum of `ReadFail` counts).
+    read_fails: u32,
+}
+
+impl FaultInjector {
+    /// The RNG stream id keeps fault-site choices independent of every
+    /// other consumer of the seed.
+    const STREAM: u64 = 0xFA_017;
+
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::new(seed, Self::STREAM), faults: Vec::new(), read_fails: 0 }
+    }
+
+    pub fn from_specs(specs: &[String], seed: u64) -> Result<Self> {
+        let mut inj = Self::new(seed);
+        for s in specs {
+            match parse_spec(s)? {
+                Fault::ReadFail { count } => inj.read_fails += count,
+                f => inj.faults.push(f),
+            }
+        }
+        Ok(inj)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty() && self.read_fails == 0
+    }
+
+    /// Forced loss for this iteration, if a NaN/Inf fault is due (one-shot).
+    pub fn loss_override(&mut self, iter: u64) -> Option<f32> {
+        let pos = self.faults.iter().position(|f| {
+            matches!(f, Fault::NanLoss { at } | Fault::InfLoss { at } if *at == iter)
+        })?;
+        match self.faults.remove(pos) {
+            Fault::NanLoss { .. } => Some(f32::NAN),
+            Fault::InfLoss { .. } => Some(f32::INFINITY),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Class whose stored tensor gets one bit flipped before this
+    /// iteration, if a bit-flip fault is due (one-shot).
+    pub fn bitflip(&mut self, iter: u64) -> Option<Class> {
+        let pos = self
+            .faults
+            .iter()
+            .position(|f| matches!(f, Fault::BitFlip { at, .. } if *at == iter))?;
+        match self.faults.remove(pos) {
+            Fault::BitFlip { class, .. } => Some(class),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Simulated transient failure for a guarded read; `Some(err)` while
+    /// injected failures remain.
+    pub fn take_read_failure(&mut self, what: &str) -> Option<anyhow::Error> {
+        if self.read_fails == 0 {
+            return None;
+        }
+        self.read_fails -= 1;
+        Some(anyhow::anyhow!("injected transient read failure ({what})"))
+    }
+
+    /// Deterministically choose a (tensor, element, exponent-bit) corruption
+    /// site.  `elems(t)` reports tensor `t`'s element count.  The bit is
+    /// drawn from the f32 exponent field (bits 23..=30) so the flip always
+    /// lands far outside the representable fixed-point range.
+    pub fn flip_site(
+        &mut self,
+        n_tensors: usize,
+        elems: impl Fn(usize) -> usize,
+    ) -> (usize, usize, u32) {
+        let t = self.rng.below(n_tensors.max(1) as u32) as usize;
+        let i = self.rng.below(elems(t).max(1) as u32) as usize;
+        let bit = 23 + self.rng.below(8);
+        (t, i, bit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_spec_form() {
+        assert_eq!(parse_spec("nan@12").unwrap(), Fault::NanLoss { at: 12 });
+        assert_eq!(parse_spec("inf@0").unwrap(), Fault::InfLoss { at: 0 });
+        assert_eq!(
+            parse_spec("bitflip@7").unwrap(),
+            Fault::BitFlip { at: 7, class: Class::Weight }
+        );
+        assert_eq!(
+            parse_spec("bitflip@7:grad").unwrap(),
+            Fault::BitFlip { at: 7, class: Class::Grad }
+        );
+        assert_eq!(parse_spec("read-fail").unwrap(), Fault::ReadFail { count: 1 });
+        assert_eq!(parse_spec("read-fail:3").unwrap(), Fault::ReadFail { count: 3 });
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in ["nan", "nan@x", "bitflip", "bitflip@3:act", "bitflip@3:nope",
+                    "warp@9", "read-fail:x"] {
+            assert!(parse_spec(bad).is_err(), "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn faults_are_one_shot() {
+        let specs = vec!["nan@5".to_string(), "bitflip@3:weight".to_string()];
+        let mut inj = FaultInjector::from_specs(&specs, 1).unwrap();
+        assert_eq!(inj.bitflip(2), None);
+        assert_eq!(inj.bitflip(3), Some(Class::Weight));
+        assert_eq!(inj.bitflip(3), None, "bitflip must not re-fire on replay");
+        assert!(inj.loss_override(5).unwrap().is_nan());
+        assert_eq!(inj.loss_override(5), None, "nan must not re-fire on replay");
+        assert!(inj.is_empty());
+    }
+
+    #[test]
+    fn inf_override_is_infinite() {
+        let mut inj = FaultInjector::from_specs(&["inf@1".to_string()], 1).unwrap();
+        assert_eq!(inj.loss_override(1), Some(f32::INFINITY));
+    }
+
+    #[test]
+    fn read_failures_count_down() {
+        let mut inj = FaultInjector::from_specs(&["read-fail:2".to_string()], 1).unwrap();
+        assert!(inj.take_read_failure("x").is_some());
+        assert!(inj.take_read_failure("x").is_some());
+        assert!(inj.take_read_failure("x").is_none());
+    }
+
+    #[test]
+    fn flip_sites_are_deterministic_and_in_range() {
+        let sizes = [100usize, 7, 3000];
+        let mut a = FaultInjector::new(42);
+        let mut b = FaultInjector::new(42);
+        for _ in 0..50 {
+            let sa = a.flip_site(sizes.len(), |t| sizes[t]);
+            let sb = b.flip_site(sizes.len(), |t| sizes[t]);
+            assert_eq!(sa, sb);
+            let (t, i, bit) = sa;
+            assert!(t < sizes.len());
+            assert!(i < sizes[t]);
+            assert!((23..=30).contains(&bit));
+        }
+    }
+}

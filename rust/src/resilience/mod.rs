@@ -1,0 +1,117 @@
+//! Training-run resilience: divergence watchdog, rollback-with-escalation,
+//! deterministic fault injection, and structured failure reporting.
+//!
+//! Aggressive low-precision training is *designed* to run at the edge of
+//! divergence: Gupta et al. (2015) show fixed-point runs collapse outright
+//! when the format is too narrow, and the paper's own controller probes
+//! bit-width downward every iteration.  This module makes a run survive
+//! crossing that edge — and survive the mundane failures (torn checkpoint
+//! writes, flaky artifact reads, corrupt data files) that kill long runs in
+//! practice:
+//!
+//! * [`watchdog`] — detects divergence from the per-iteration feedback
+//!   (non-finite loss, loss explosion vs a running baseline, sustained
+//!   overflow rate);
+//! * [`faults`] — seeded, spec-driven fault injection (bit-flips in stored
+//!   tensors, forced NaN/Inf losses, simulated transient read failures) so
+//!   the recovery path is exercisable deterministically in tests and
+//!   `examples/fault_recovery.rs`;
+//! * [`retry`] — retry-with-backoff used by the runtime loader and the
+//!   data pipeline for transient IO;
+//! * [`FailureReport`] — the machine-readable post-mortem written when the
+//!   retry budget is exhausted and the run aborts gracefully.
+//!
+//! The *response* side — rollback to the last complete checkpoint plus
+//! precision escalation through [`crate::policy::Policy::escalate`], with a
+//! bounded retry budget and exponential backoff — lives in
+//! [`crate::trainer::run_experiment`]; crash-safe checkpoint IO lives in
+//! [`crate::trainer::checkpoint`].
+
+pub mod faults;
+pub mod retry;
+pub mod watchdog;
+
+pub use faults::{parse_spec, Fault, FaultInjector};
+pub use retry::retry_with_backoff;
+pub use watchdog::{TripReason, Watchdog, WatchdogConfig};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::metrics::History;
+use crate::util::json::Json;
+
+/// Written to `<out_dir>/failure_report.json` when a run exhausts its
+/// recovery budget: everything needed to triage the abort offline.
+#[derive(Debug, Clone)]
+pub struct FailureReport {
+    pub scheme: String,
+    pub model: String,
+    /// Iteration of the final, fatal trip.
+    pub iter: u64,
+    /// Recovery attempts consumed before aborting.
+    pub attempts: u64,
+    /// Human-readable reason of the final trip.
+    pub reason: String,
+}
+
+impl FailureReport {
+    /// Serialize the report plus the run's recovery-event trail.
+    pub fn to_json(&self, hist: &History) -> Json {
+        Json::obj(vec![
+            ("status", Json::Str("aborted".into())),
+            ("scheme", Json::Str(self.scheme.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("iter", Json::Num(self.iter as f64)),
+            ("attempts", Json::Num(self.attempts as f64)),
+            ("reason", Json::Str(self.reason.clone())),
+            ("recovery_events", hist.recovery_json()),
+        ])
+    }
+
+    /// Write the report under `dir` and return its path.
+    pub fn write(&self, dir: &str, hist: &History) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = Path::new(dir).join("failure_report.json");
+        std::fs::write(&path, self.to_json(hist).to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_report_roundtrips_through_json() {
+        let mut hist = History::new("qedps", "mlp");
+        hist.recovery.push(crate::metrics::RecoveryEvent {
+            iter: 12,
+            kind: "non_finite_loss".into(),
+            detail: "loss is not finite (NaN)".into(),
+            rollback_to: Some(10),
+        });
+        let report = FailureReport {
+            scheme: "qedps".into(),
+            model: "mlp".into(),
+            iter: 15,
+            attempts: 3,
+            reason: "loss is not finite (NaN)".into(),
+        };
+        let dir = std::env::temp_dir().join("qedps_failure_report");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = report.write(&dir.to_string_lossy(), &hist).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(j.get("status").as_str(), Some("aborted"));
+        assert_eq!(j.get("attempts").as_f64(), Some(3.0));
+        assert_eq!(
+            j.get("recovery_events").at(0).get("kind").as_str(),
+            Some("non_finite_loss")
+        );
+        assert_eq!(
+            j.get("recovery_events").at(0).get("rollback_to").as_f64(),
+            Some(10.0)
+        );
+    }
+}

@@ -1,0 +1,96 @@
+//! Retry-with-backoff for transient IO: artifact parses, param npz reads,
+//! dataset loads.  A network filesystem hiccup or an injected
+//! [`crate::resilience::FaultInjector`] read failure should cost a warning
+//! and a short sleep, not the whole run.
+
+use anyhow::{Context, Result};
+
+/// Run `op` up to `attempts` times, sleeping `base_delay_ms * 2^k` between
+/// failures.  `op` receives the 0-based attempt index (so callers can
+/// consult a fault injector on early attempts only, log differently, etc.).
+/// The final error carries the attempt count as context.
+pub fn retry_with_backoff<T>(
+    what: &str,
+    attempts: u32,
+    base_delay_ms: u64,
+    mut op: impl FnMut(u32) -> Result<T>,
+) -> Result<T> {
+    let attempts = attempts.max(1);
+    let mut delay = base_delay_ms;
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..attempts {
+        match op(attempt) {
+            Ok(v) => {
+                if attempt > 0 {
+                    crate::log_info!("{what}: recovered on attempt {}", attempt + 1);
+                }
+                return Ok(v);
+            }
+            Err(e) => {
+                if attempt + 1 < attempts {
+                    crate::log_warn!(
+                        "{what}: attempt {}/{attempts} failed ({e:#}); retrying in {delay}ms",
+                        attempt + 1
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(delay));
+                    delay = delay.saturating_mul(2);
+                }
+                last = Some(e);
+            }
+        }
+    }
+    Err(last
+        .unwrap_or_else(|| anyhow::anyhow!("no attempts made"))
+        .context(format!("{what}: failed after {attempts} attempts")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn succeeds_first_try() {
+        let mut calls = 0;
+        let v = retry_with_backoff("t", 3, 0, |_| {
+            calls += 1;
+            Ok(7)
+        })
+        .unwrap();
+        assert_eq!(v, 7);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn recovers_after_transient_failures() {
+        let mut calls = 0;
+        let v: i32 = retry_with_backoff("t", 4, 0, |attempt| {
+            calls += 1;
+            if attempt < 2 {
+                anyhow::bail!("transient");
+            }
+            Ok(9)
+        })
+        .unwrap();
+        assert_eq!(v, 9);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn exhaustion_reports_attempts() {
+        let err = retry_with_backoff::<()>("flaky-read", 3, 0, |_| anyhow::bail!("nope"))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("after 3 attempts"), "{msg}");
+        assert!(msg.contains("nope"), "{msg}");
+    }
+
+    #[test]
+    fn zero_attempts_clamped_to_one() {
+        let mut calls = 0;
+        let _ = retry_with_backoff::<()>("t", 0, 0, |_| {
+            calls += 1;
+            anyhow::bail!("x")
+        });
+        assert_eq!(calls, 1);
+    }
+}

@@ -1,0 +1,248 @@
+//! The divergence watchdog: decides *when* a run is in trouble.
+//!
+//! Low-precision training sits on the edge of divergence by design — the
+//! whole point of the paper's controller is to probe bit-width downward
+//! until the quantization signals push back.  When the probe goes too far
+//! (or a hardware fault corrupts state), three symptoms show up in the
+//! per-iteration feedback the trainer already collects:
+//!
+//! 1. **non-finite loss** — NaN/Inf from overflowed accumulators;
+//! 2. **loss explosion** — loss far above its recent running baseline;
+//! 3. **sustained overflow** — a class's overflow rate `R` pinned high for
+//!    many consecutive iterations (clipping is corrupting dot products
+//!    faster than the radix controller can react).
+//!
+//! The watchdog is purely observational: it consumes [`Feedback`] and
+//! returns a [`TripReason`]; the rollback/escalation response lives in the
+//! trainer driver.  After a rollback the driver calls [`Watchdog::hold_until`]
+//! to grant an exponentially growing grace window so escalation has room to
+//! take effect before the next trip can fire.
+
+use crate::policy::{Class, Feedback};
+
+/// Watchdog thresholds (see [`crate::config::ExperimentConfig`] for the
+/// TOML/CLI surface; these defaults match `ExperimentConfig::default`).
+#[derive(Debug, Clone, Copy)]
+pub struct WatchdogConfig {
+    /// Trip when a finite loss exceeds `loss_ratio * baseline` (EWMA).
+    pub loss_ratio: f32,
+    /// Number of finite-loss observations before the ratio rule arms.
+    pub warmup: u64,
+    /// Per-class overflow rate considered "saturating".
+    pub r_trip: f32,
+    /// Consecutive iterations above `r_trip` before tripping.
+    pub r_window: u64,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        Self { loss_ratio: 4.0, warmup: 20, r_trip: 0.25, r_window: 8 }
+    }
+}
+
+/// Why the watchdog tripped.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TripReason {
+    NonFiniteLoss { loss: f32 },
+    LossExplosion { loss: f32, baseline: f32 },
+    SustainedOverflow { class: Class, r: f32, window: u64 },
+}
+
+impl TripReason {
+    /// Stable string tag recorded into metrics / failure reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TripReason::NonFiniteLoss { .. } => "non_finite_loss",
+            TripReason::LossExplosion { .. } => "loss_explosion",
+            TripReason::SustainedOverflow { .. } => "sustained_overflow",
+        }
+    }
+
+    /// The attribute class to escalate, when the symptom names one.
+    pub fn class(&self) -> Option<Class> {
+        match self {
+            TripReason::SustainedOverflow { class, .. } => Some(*class),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TripReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TripReason::NonFiniteLoss { loss } => write!(f, "loss is not finite ({loss})"),
+            TripReason::LossExplosion { loss, baseline } => {
+                write!(f, "loss exploded ({loss:.4} vs baseline {baseline:.4})")
+            }
+            TripReason::SustainedOverflow { class, r, window } => {
+                write!(f, "overflow rate pinned at {r:.3} for {window} iters ({class:?})")
+            }
+        }
+    }
+}
+
+const CLASSES: [Class; 3] = [Class::Weight, Class::Act, Class::Grad];
+
+/// Streaming divergence detector; one instance per training attempt.
+#[derive(Debug, Clone)]
+pub struct Watchdog {
+    cfg: WatchdogConfig,
+    /// EWMA of finite losses (the explosion baseline).
+    ewma: f64,
+    /// Finite-loss observations folded into the EWMA so far.
+    seen: u64,
+    /// Consecutive iterations with `R > r_trip`, per class.
+    over: [u64; 3],
+    /// Trips are suppressed while `iter < armed_at` (post-rollback grace).
+    armed_at: u64,
+}
+
+impl Watchdog {
+    const ALPHA: f64 = 0.1;
+
+    pub fn new(cfg: WatchdogConfig) -> Self {
+        Self { cfg, ewma: 0.0, seen: 0, over: [0; 3], armed_at: 0 }
+    }
+
+    /// Feed one iteration's feedback; `Some(reason)` means roll back now.
+    pub fn observe(&mut self, fb: &Feedback) -> Option<TripReason> {
+        let armed = fb.iter >= self.armed_at;
+        for (i, class) in CLASSES.into_iter().enumerate() {
+            if fb.class(class).r > self.cfg.r_trip {
+                self.over[i] += 1;
+            } else {
+                self.over[i] = 0;
+            }
+        }
+
+        if !fb.loss.is_finite() {
+            return armed.then_some(TripReason::NonFiniteLoss { loss: fb.loss });
+        }
+
+        // Compare against the baseline *before* folding the new loss in, so
+        // a fast blow-up cannot drag its own baseline upward.
+        let baseline = (self.ewma) as f32;
+        if armed
+            && self.seen >= self.cfg.warmup
+            && fb.loss > self.cfg.loss_ratio * baseline
+        {
+            return Some(TripReason::LossExplosion { loss: fb.loss, baseline });
+        }
+        self.ewma = if self.seen == 0 {
+            fb.loss as f64
+        } else {
+            (1.0 - Self::ALPHA) * self.ewma + Self::ALPHA * fb.loss as f64
+        };
+        self.seen += 1;
+
+        if armed {
+            for (i, class) in CLASSES.into_iter().enumerate() {
+                if self.over[i] >= self.cfg.r_window {
+                    self.over[i] = 0;
+                    return Some(TripReason::SustainedOverflow {
+                        class,
+                        r: fb.class(class).r,
+                        window: self.cfg.r_window,
+                    });
+                }
+            }
+        }
+        None
+    }
+
+    /// Suppress trips until `iter` (exponential-backoff grace after a
+    /// rollback) and clear the overflow streaks.
+    pub fn hold_until(&mut self, iter: u64) {
+        self.armed_at = iter;
+        self.over = [0; 3];
+    }
+
+    /// Forget the loss baseline (the run state was rewound past it).
+    pub fn reset_baseline(&mut self) {
+        self.ewma = 0.0;
+        self.seen = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::ClassStats;
+
+    fn fb(iter: u64, loss: f32, r: f32) -> Feedback {
+        let s = ClassStats { e: 0.0, r };
+        Feedback { iter, loss, weights: s, acts: s, grads: s }
+    }
+
+    #[test]
+    fn trips_on_non_finite_loss() {
+        let mut w = Watchdog::new(WatchdogConfig::default());
+        assert_eq!(w.observe(&fb(0, 1.0, 0.0)), None);
+        let trip = w.observe(&fb(1, f32::NAN, 0.0)).expect("must trip");
+        assert_eq!(trip.kind(), "non_finite_loss");
+        assert_eq!(trip.class(), None);
+    }
+
+    #[test]
+    fn trips_on_loss_explosion_after_warmup() {
+        let cfg = WatchdogConfig { warmup: 5, ..Default::default() };
+        let mut w = Watchdog::new(cfg);
+        for i in 0..10 {
+            assert_eq!(w.observe(&fb(i, 1.0, 0.0)), None, "iter {i}");
+        }
+        // 10x the baseline with ratio 4: trip
+        let trip = w.observe(&fb(10, 10.0, 0.0)).expect("must trip");
+        assert_eq!(trip.kind(), "loss_explosion");
+    }
+
+    #[test]
+    fn no_explosion_trip_during_warmup() {
+        let cfg = WatchdogConfig { warmup: 50, ..Default::default() };
+        let mut w = Watchdog::new(cfg);
+        assert_eq!(w.observe(&fb(0, 1.0, 0.0)), None);
+        assert_eq!(w.observe(&fb(1, 100.0, 0.0)), None);
+    }
+
+    #[test]
+    fn trips_on_sustained_overflow_with_class() {
+        let cfg = WatchdogConfig { r_trip: 0.2, r_window: 3, ..Default::default() };
+        let mut w = Watchdog::new(cfg);
+        assert_eq!(w.observe(&fb(0, 1.0, 0.5)), None);
+        assert_eq!(w.observe(&fb(1, 1.0, 0.5)), None);
+        let trip = w.observe(&fb(2, 1.0, 0.5)).expect("must trip");
+        assert_eq!(trip.kind(), "sustained_overflow");
+        // Weight is checked first
+        assert_eq!(trip.class(), Some(Class::Weight));
+    }
+
+    #[test]
+    fn overflow_streak_resets_on_clean_iteration() {
+        let cfg = WatchdogConfig { r_trip: 0.2, r_window: 3, ..Default::default() };
+        let mut w = Watchdog::new(cfg);
+        for i in 0..10 {
+            // alternating dirty/clean never accumulates a window
+            let r = if i % 2 == 0 { 0.5 } else { 0.0 };
+            assert_eq!(w.observe(&fb(i, 1.0, r)), None, "iter {i}");
+        }
+    }
+
+    #[test]
+    fn hold_until_grants_grace() {
+        let mut w = Watchdog::new(WatchdogConfig::default());
+        w.hold_until(100);
+        assert_eq!(w.observe(&fb(50, f32::NAN, 0.0)), None);
+        assert!(w.observe(&fb(100, f32::NAN, 0.0)).is_some());
+    }
+
+    #[test]
+    fn reset_baseline_forgets_history() {
+        let cfg = WatchdogConfig { warmup: 2, ..Default::default() };
+        let mut w = Watchdog::new(cfg);
+        for i in 0..5 {
+            w.observe(&fb(i, 0.1, 0.0));
+        }
+        w.reset_baseline();
+        // would have tripped against the 0.1 baseline; fresh baseline absorbs it
+        assert_eq!(w.observe(&fb(5, 5.0, 0.0)), None);
+    }
+}

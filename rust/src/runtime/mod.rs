@@ -108,8 +108,17 @@ impl Runtime {
         let spec = self.manifest.module(name)?.clone();
         let path = self.dir.join(&spec.file);
         let t = crate::util::Stopwatch::start();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        // artifact reads go over whatever filesystem hosts the repo (often
+        // network-mounted on CI) — retry transient failures before giving up
+        let proto = crate::resilience::retry_with_backoff(
+            &format!("loading artifact {name}"),
+            3,
+            100,
+            |_| {
+                xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))
+            },
+        )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
@@ -126,8 +135,15 @@ impl Runtime {
     pub fn load_params(&self, model: &str) -> Result<Vec<Literal>> {
         let meta = self.manifest.model(model)?;
         let path = self.dir.join(format!("{model}_params.npz"));
-        let named = Literal::read_npz(&path, &())
-            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+        let named = crate::resilience::retry_with_backoff(
+            &format!("loading {model} params"),
+            3,
+            100,
+            |_| {
+                Literal::read_npz(&path, &())
+                    .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))
+            },
+        )?;
         let mut by_name: HashMap<String, Literal> = named
             .into_iter()
             .map(|(mut n, l)| {

@@ -1,5 +1,5 @@
-//! Checkpointing: parameters + momentum as numpy-compatible `.npy` files,
-//! run state as JSON.
+//! Crash-safe checkpointing: parameters + momentum as numpy-compatible
+//! `.npy` files, run state as checksum-validated JSON.
 //!
 //! The xla crate's own `write_npy`/`write_npz` are broken upstream (they
 //! `copy_raw_to::<u8>` an f32 literal, which its type check rejects), so
@@ -10,12 +10,23 @@
 //! ```text
 //! <dir>/state-<iter>/p_<k>.npy     parameter tensors (manifest order)
 //! <dir>/state-<iter>/m_<k>.npy     momentum tensors
-//! <dir>/state-<iter>/state.json    iter, scheme, model, <IL,FL> triple
+//! <dir>/state-<iter>/state.json    iter, scheme, model, <IL,FL>, checksum
 //! <dir>/LATEST                     iter number of the newest checkpoint
 //! ```
+//!
+//! ## Torn-write safety
+//!
+//! A checkpoint is staged in `state-<iter>.tmp/`, every file is fsynced,
+//! and the directory is renamed into place only when complete — a crash
+//! mid-write leaves a `.tmp` directory that resume ignores.  `state.json`
+//! carries an FNV-1a checksum over the tensor bytes (written last, inside
+//! the staged dir), so even a checkpoint corrupted after the fact is
+//! detected and skipped.  `LATEST` is likewise updated via temp+rename,
+//! but it is only a hint: [`load_latest`] always resumes from the newest
+//! checkpoint that *validates*, scanning past torn or corrupt ones.
 
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 use xla::{FromRawBytes, Literal};
@@ -26,8 +37,9 @@ use crate::util::json::Json;
 
 use super::Trainer;
 
-/// Write one f32 literal as a numpy `.npy` (v1.0, C order, little-endian).
-pub fn write_npy_f32(path: &Path, lit: &Literal) -> Result<()> {
+/// Serialize one f32 literal as numpy `.npy` bytes (v1.0, C order,
+/// little-endian).
+pub fn npy_bytes_f32(lit: &Literal) -> Result<Vec<u8>> {
     let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e}"))?;
     let dims: Vec<String> = shape.dims().iter().map(|d| d.to_string()).collect();
     let shape_str = match dims.len() {
@@ -45,79 +57,232 @@ pub fn write_npy_f32(path: &Path, lit: &Literal) -> Result<()> {
     header.push('\n');
 
     let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(b"\x93NUMPY\x01\x00")?;
-    f.write_all(&(header.len() as u16).to_le_bytes())?;
-    f.write_all(header.as_bytes())?;
+    let mut out = Vec::with_capacity(base + header.len() + 4 * data.len());
+    out.extend_from_slice(b"\x93NUMPY\x01\x00");
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
     for v in &data {
-        f.write_all(&v.to_le_bytes())?;
+        out.extend_from_slice(&v.to_le_bytes());
     }
-    f.flush()?;
+    Ok(out)
+}
+
+/// Write one f32 literal as a numpy `.npy` file.
+pub fn write_npy_f32(path: &Path, lit: &Literal) -> Result<()> {
+    std::fs::write(path, npy_bytes_f32(lit)?)?;
     Ok(())
 }
 
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64, chainable (`h` starts at [`FNV_OFFSET`]).
+fn fnv1a64(bytes: &[u8], mut h: u64) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Write + fsync one file (the building block of the atomic protocol).
+fn write_synced(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {path:?}"))?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    Ok(())
+}
+
+/// The run metadata stored in `state.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointMeta {
+    pub iter: u64,
+    pub model: String,
+    pub scheme: String,
+    pub n_params: usize,
+    pub prec: PrecState,
+}
+
+/// Checkpoint a trainer's current state (convenience wrapper over
+/// [`save_state`]).
 pub fn save(dir: &str, trainer: &Trainer, iter: u64) -> Result<()> {
-    let step_dir = Path::new(dir).join(format!("state-{iter}"));
-    std::fs::create_dir_all(&step_dir)?;
-    for (k, lit) in trainer.params().iter().enumerate() {
-        write_npy_f32(&step_dir.join(format!("p_{k}.npy")), lit)?;
+    save_state(
+        dir,
+        &trainer.cfg.model,
+        trainer.policy.name(),
+        trainer.prec,
+        trainer.params(),
+        trainer.mom(),
+        iter,
+    )
+}
+
+/// Atomically write one checkpoint: stage into `state-<iter>.tmp/`, fsync,
+/// rename into place, then update `LATEST` via temp+rename.
+pub fn save_state(
+    dir: &str,
+    model: &str,
+    scheme: &str,
+    prec: PrecState,
+    params: &[Literal],
+    mom: &[Literal],
+    iter: u64,
+) -> Result<()> {
+    let dirp = Path::new(dir);
+    std::fs::create_dir_all(dirp)?;
+    let tmp = dirp.join(format!("state-{iter}.tmp"));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp)?;
+
+    let mut hash = FNV_OFFSET;
+    for (prefix, tensors) in [("p", params), ("m", mom)] {
+        for (k, lit) in tensors.iter().enumerate() {
+            let bytes = npy_bytes_f32(lit)?;
+            hash = fnv1a64(&bytes, hash);
+            write_synced(&tmp.join(format!("{prefix}_{k}.npy")), &bytes)?;
+        }
     }
-    for (k, lit) in trainer.mom().iter().enumerate() {
-        write_npy_f32(&step_dir.join(format!("m_{k}.npy")), lit)?;
-    }
-    let p = trainer.prec;
     let state = Json::obj(vec![
         ("iter", Json::Num(iter as f64)),
-        ("model", Json::Str(trainer.cfg.model.clone())),
-        ("scheme", Json::Str(trainer.policy.name().into())),
-        ("n_params", Json::Num(trainer.params().len() as f64)),
-        ("prec", Json::arr_f64(&p.to_vec().map(|v| v as f64))),
+        ("model", Json::Str(model.into())),
+        ("scheme", Json::Str(scheme.into())),
+        ("n_params", Json::Num(params.len() as f64)),
+        ("prec", Json::arr_f64(&prec.to_vec().map(|v| v as f64))),
+        ("checksum", Json::Str(format!("{hash:016x}"))),
     ]);
-    std::fs::write(step_dir.join("state.json"), state.to_string_pretty())?;
-    std::fs::write(Path::new(dir).join("LATEST"), iter.to_string())?;
+    write_synced(&tmp.join("state.json"), state.to_string_pretty().as_bytes())?;
+
+    let step_dir = dirp.join(format!("state-{iter}"));
+    let _ = std::fs::remove_dir_all(&step_dir);
+    std::fs::rename(&tmp, &step_dir)
+        .with_context(|| format!("publishing {step_dir:?}"))?;
+    // make the rename itself durable
+    if let Ok(d) = std::fs::File::open(dirp) {
+        let _ = d.sync_all();
+    }
+
+    let latest_tmp = dirp.join("LATEST.tmp");
+    write_synced(&latest_tmp, iter.to_string().as_bytes())?;
+    std::fs::rename(&latest_tmp, dirp.join("LATEST"))?;
     crate::log_debug!("checkpoint: saved iter {iter} to {}", step_dir.display());
     Ok(())
 }
 
-/// Restore the newest checkpoint into `trainer`; returns the next iter.
-pub fn load_latest(dir: &str, trainer: &mut Trainer) -> Result<u64> {
-    let iter: u64 = std::fs::read_to_string(Path::new(dir).join("LATEST"))
-        .context("no LATEST in checkpoint dir")?
-        .trim()
-        .parse()
-        .context("bad LATEST")?;
-    let step_dir = Path::new(dir).join(format!("state-{iter}"));
-    let text = std::fs::read_to_string(step_dir.join("state.json"))?;
-    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
-    anyhow::ensure!(
-        j.get("model").as_str() == Some(trainer.cfg.model.as_str()),
-        "checkpoint is for model {:?}, trainer has {}",
-        j.get("model").as_str(),
-        trainer.cfg.model
-    );
-    let n = j.get("n_params").as_usize().context("n_params")?;
-    let mut params = Vec::with_capacity(n);
-    let mut mom = Vec::with_capacity(n);
-    for k in 0..n {
-        params.push(
-            Literal::read_npy(step_dir.join(format!("p_{k}.npy")), &())
-                .map_err(|e| anyhow::anyhow!("p_{k}: {e}"))?,
-        );
-        mom.push(
-            Literal::read_npy(step_dir.join(format!("m_{k}.npy")), &())
-                .map_err(|e| anyhow::anyhow!("m_{k}: {e}"))?,
-        );
-    }
+fn prec_from_json(j: &Json) -> Result<PrecState> {
     let pv = j.get("prec");
     let f = |i: usize| -> Result<i32> {
         Ok(pv.at(i).as_f64().context("prec")? as i32)
     };
-    let prec = PrecState {
+    Ok(PrecState {
         weights: Format::new(f(0)?, f(1)?),
         acts: Format::new(f(2)?, f(3)?),
         grads: Format::new(f(4)?, f(5)?),
+    })
+}
+
+/// Validate one `state-<iter>/` directory: parse `state.json`, confirm all
+/// tensor files are present and (when the checkpoint carries a checksum)
+/// that their bytes hash to it.  Pre-resilience checkpoints without a
+/// checksum are accepted if every tensor file reads back.
+pub fn validate(step_dir: &Path) -> Result<CheckpointMeta> {
+    let text = std::fs::read_to_string(step_dir.join("state.json"))
+        .with_context(|| format!("{step_dir:?}: no state.json"))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{step_dir:?}/state.json: {e}"))?;
+    let meta = CheckpointMeta {
+        iter: j.get("iter").as_f64().context("iter")? as u64,
+        model: j.get("model").as_str().context("model")?.to_string(),
+        scheme: j.get("scheme").as_str().unwrap_or("?").to_string(),
+        n_params: j.get("n_params").as_usize().context("n_params")?,
+        prec: prec_from_json(&j)?,
     };
-    trainer.restore(params, mom, prec);
+    let mut hash = FNV_OFFSET;
+    for prefix in ["p", "m"] {
+        for k in 0..meta.n_params {
+            let path = step_dir.join(format!("{prefix}_{k}.npy"));
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("{path:?}: missing tensor file"))?;
+            hash = fnv1a64(&bytes, hash);
+        }
+    }
+    if let Some(want) = j.get("checksum").as_str() {
+        let got = format!("{hash:016x}");
+        anyhow::ensure!(
+            got == want,
+            "{step_dir:?}: checksum mismatch ({got} != {want})"
+        );
+    }
+    Ok(meta)
+}
+
+/// Iteration numbers of all non-staged `state-<n>` dirs under `dir`,
+/// newest first (no validation — see [`latest_complete`]).
+pub fn list_candidates(dir: &str) -> Vec<u64> {
+    let mut iters: Vec<u64> = match std::fs::read_dir(dir) {
+        Ok(entries) => entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                name.strip_prefix("state-")?.parse().ok()
+            })
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    iters.sort_unstable_by(|a, b| b.cmp(a));
+    iters
+}
+
+/// The newest checkpoint under `dir` that passes [`validate`], skipping
+/// (with a warning) any torn or corrupt ones.
+pub fn latest_complete(dir: &str) -> Option<u64> {
+    for iter in list_candidates(dir) {
+        let step_dir = Path::new(dir).join(format!("state-{iter}"));
+        match validate(&step_dir) {
+            Ok(_) => return Some(iter),
+            Err(e) => {
+                crate::log_warn!("checkpoint: skipping {}: {e:#}", step_dir.display())
+            }
+        }
+    }
+    None
+}
+
+/// Read a validated checkpoint's tensors (standalone — no trainer needed).
+pub fn load_state(
+    dir: &str,
+    iter: u64,
+) -> Result<(CheckpointMeta, Vec<Literal>, Vec<Literal>)> {
+    let step_dir: PathBuf = Path::new(dir).join(format!("state-{iter}"));
+    let meta = validate(&step_dir)?;
+    let read = |prefix: &str, k: usize| -> Result<Literal> {
+        let path = step_dir.join(format!("{prefix}_{k}.npy"));
+        Literal::read_npy(&path, &()).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))
+    };
+    let mut params = Vec::with_capacity(meta.n_params);
+    let mut mom = Vec::with_capacity(meta.n_params);
+    for k in 0..meta.n_params {
+        params.push(read("p", k)?);
+        mom.push(read("m", k)?);
+    }
+    Ok((meta, params, mom))
+}
+
+/// Restore the newest *complete* checkpoint into `trainer`; returns the
+/// next iteration to run.  `LATEST` is only a hint — torn or corrupt
+/// checkpoints (including leftover `state-<n>.tmp` staging dirs) are
+/// skipped, so a crash mid-checkpoint never corrupts resume.
+pub fn load_latest(dir: &str, trainer: &mut Trainer) -> Result<u64> {
+    let iter = latest_complete(dir)
+        .with_context(|| format!("no usable checkpoint under {dir}"))?;
+    let (meta, params, mom) = load_state(dir, iter)?;
+    anyhow::ensure!(
+        meta.model == trainer.cfg.model,
+        "checkpoint is for model {:?}, trainer has {}",
+        meta.model,
+        trainer.cfg.model
+    );
+    trainer.restore(params, mom, meta.prec);
     Ok(iter + 1)
 }
 
@@ -126,10 +291,32 @@ mod tests {
     use super::*;
     use crate::runtime::literal_f32;
 
+    fn fresh_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn tensors(scale: f32) -> Vec<Literal> {
+        vec![
+            literal_f32(&[1.0 * scale, -2.0 * scale], &[2]).unwrap(),
+            literal_f32(&(0..6).map(|i| i as f32 * scale).collect::<Vec<_>>(), &[2, 3])
+                .unwrap(),
+        ]
+    }
+
+    fn prec() -> PrecState {
+        PrecState {
+            weights: Format::new(2, 14),
+            acts: Format::new(4, 12),
+            grads: Format::new(2, 20),
+        }
+    }
+
     #[test]
     fn npy_roundtrip_shapes() {
-        let dir = std::env::temp_dir().join("qedps_npy_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = fresh_dir("qedps_npy_test");
         for (data, shape) in [
             (vec![1.5f32, -2.25, 3.0, 0.0], vec![2usize, 2]),
             (vec![7.0f32], vec![] as Vec<usize>),
@@ -149,8 +336,7 @@ mod tests {
 
     #[test]
     fn npy_is_numpy_compatible_header() {
-        let dir = std::env::temp_dir().join("qedps_npy_hdr");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = fresh_dir("qedps_npy_hdr");
         let lit = literal_f32(&[1.0, 2.0], &[2]).unwrap();
         let path = dir.join("h.npy");
         write_npy_f32(&path, &lit).unwrap();
@@ -162,5 +348,102 @@ mod tests {
         let header = std::str::from_utf8(&bytes[10..10 + hlen]).unwrap();
         assert!(header.contains("'descr': '<f4'"), "{header}");
         assert!(header.ends_with('\n'));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = fresh_dir("qedps_ckpt_rt");
+        let dir_s = dir.to_string_lossy().into_owned();
+        let (params, mom) = (tensors(1.0), tensors(0.5));
+        save_state(&dir_s, "mlp", "qedps", prec(), &params, &mom, 42).unwrap();
+
+        assert_eq!(latest_complete(&dir_s), Some(42));
+        let (meta, p2, m2) = load_state(&dir_s, 42).unwrap();
+        assert_eq!(meta.iter, 42);
+        assert_eq!(meta.model, "mlp");
+        assert_eq!(meta.scheme, "qedps");
+        assert_eq!(meta.prec, prec());
+        for (a, b) in params.iter().zip(&p2) {
+            assert_eq!(a.to_vec::<f32>().unwrap(), b.to_vec::<f32>().unwrap());
+        }
+        for (a, b) in mom.iter().zip(&m2) {
+            assert_eq!(a.to_vec::<f32>().unwrap(), b.to_vec::<f32>().unwrap());
+        }
+        // no staging leftovers
+        assert!(!dir.join("state-42.tmp").exists());
+        assert_eq!(
+            std::fs::read_to_string(dir.join("LATEST")).unwrap().trim(),
+            "42"
+        );
+    }
+
+    #[test]
+    fn resume_skips_torn_checkpoints() {
+        let dir = fresh_dir("qedps_ckpt_torn");
+        let dir_s = dir.to_string_lossy().into_owned();
+        let (params, mom) = (tensors(1.0), tensors(0.5));
+        save_state(&dir_s, "mlp", "qedps", prec(), &params, &mom, 5).unwrap();
+        save_state(&dir_s, "mlp", "qedps", prec(), &params, &mom, 9).unwrap();
+
+        // simulate a kill mid-checkpoint: newest dir lost its state.json
+        std::fs::remove_file(dir.join("state-9/state.json")).unwrap();
+        assert_eq!(latest_complete(&dir_s), Some(5));
+
+        // a leftover staging dir (crash before rename) is never a candidate
+        std::fs::create_dir_all(dir.join("state-12.tmp")).unwrap();
+        std::fs::write(dir.join("state-12.tmp/p_0.npy"), b"partial").unwrap();
+        assert_eq!(latest_complete(&dir_s), Some(5));
+    }
+
+    #[test]
+    fn corrupt_tensor_bytes_fail_checksum() {
+        let dir = fresh_dir("qedps_ckpt_sum");
+        let dir_s = dir.to_string_lossy().into_owned();
+        let (params, mom) = (tensors(1.0), tensors(0.5));
+        save_state(&dir_s, "mlp", "qedps", prec(), &params, &mom, 7).unwrap();
+        // flip one payload byte
+        let p0 = dir.join("state-7/p_0.npy");
+        let mut bytes = std::fs::read(&p0).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&p0, bytes).unwrap();
+        assert!(validate(&dir.join("state-7")).is_err());
+        assert_eq!(latest_complete(&dir_s), None);
+    }
+
+    #[test]
+    fn missing_tensor_file_is_torn() {
+        let dir = fresh_dir("qedps_ckpt_missing");
+        let dir_s = dir.to_string_lossy().into_owned();
+        let (params, mom) = (tensors(1.0), tensors(0.5));
+        save_state(&dir_s, "mlp", "qedps", prec(), &params, &mom, 3).unwrap();
+        std::fs::remove_file(dir.join("state-3/m_1.npy")).unwrap();
+        assert!(validate(&dir.join("state-3")).is_err());
+    }
+
+    #[test]
+    fn legacy_checkpoint_without_checksum_still_validates() {
+        let dir = fresh_dir("qedps_ckpt_legacy");
+        let dir_s = dir.to_string_lossy().into_owned();
+        let (params, mom) = (tensors(1.0), tensors(0.5));
+        save_state(&dir_s, "mlp", "qedps", prec(), &params, &mom, 8).unwrap();
+        // rewrite state.json without the checksum field (pre-resilience layout)
+        let sj = dir.join("state-8/state.json");
+        let j = Json::parse(&std::fs::read_to_string(&sj).unwrap()).unwrap();
+        let mut map = j.as_obj().unwrap().clone();
+        map.remove("checksum");
+        std::fs::write(&sj, Json::Obj(map).to_string_pretty()).unwrap();
+        assert_eq!(validate(&dir.join("state-8")).unwrap().iter, 8);
+    }
+
+    #[test]
+    fn stale_latest_hint_does_not_break_resume() {
+        let dir = fresh_dir("qedps_ckpt_stale");
+        let dir_s = dir.to_string_lossy().into_owned();
+        let (params, mom) = (tensors(1.0), tensors(0.5));
+        save_state(&dir_s, "mlp", "qedps", prec(), &params, &mom, 4).unwrap();
+        // LATEST points at a checkpoint that never finished
+        std::fs::write(dir.join("LATEST"), "99").unwrap();
+        assert_eq!(latest_complete(&dir_s), Some(4));
     }
 }

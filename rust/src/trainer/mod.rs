@@ -10,6 +10,17 @@
 //! 5. record metrics; periodically evaluate on the test set and checkpoint.
 //!
 //! Python is never involved: the step is a compiled PJRT executable.
+//!
+//! ## Recovery (see [`crate::resilience`])
+//!
+//! [`run_experiment`] wraps the loop in a divergence watchdog.  When the
+//! watchdog trips — and the policy can escalate ([`Policy::can_escalate`];
+//! static baselines keep their divergence, it *is* the §5 experiment) —
+//! the driver rolls back to the newest complete checkpoint (or a fresh
+//! initialization when none exists), widens the precision through
+//! [`Policy::escalate`], rewinds the batch stream deterministically, and
+//! replays.  The retry budget is bounded; exhausting it writes a
+//! structured failure report and aborts.
 
 pub mod checkpoint;
 
@@ -18,8 +29,11 @@ use xla::Literal;
 
 use crate::config::ExperimentConfig;
 use crate::data::{batcher::EvalBatcher, Batcher, Dataset};
-use crate::metrics::{EvalRecord, History, TrainRecord};
+use crate::metrics::{EvalRecord, History, RecoveryEvent, TrainRecord};
 use crate::policy::{make_policy, Class, ClassStats, Feedback, Policy, PrecState};
+use crate::resilience::{
+    retry_with_backoff, FailureReport, FaultInjector, Watchdog, WatchdogConfig,
+};
 use crate::runtime::{literal_f32, literal_i32, Executable, Runtime};
 use crate::util::Stopwatch;
 
@@ -231,6 +245,47 @@ impl Trainer {
         self.prec = prec;
     }
 
+    /// Reset to iteration-0 state (rollback target when no checkpoint
+    /// exists yet): fresh parameters, zero momentum, the policy's initial
+    /// precision.
+    pub fn reinit(&mut self, rt: &mut Runtime) -> Result<()> {
+        self.params = rt.load_params(&self.cfg.model)?;
+        self.mom = rt.zeros_like_params(&self.cfg.model)?;
+        self.prec = self.policy.init();
+        Ok(())
+    }
+
+    /// Flip one exponent bit in a stored tensor (fault injection):
+    /// `Weight` corrupts a parameter, `Grad` corrupts a momentum slot.
+    /// Returns a description of the corruption for the recovery log.
+    pub fn corrupt_value(
+        &mut self,
+        class: Class,
+        inj: &mut FaultInjector,
+    ) -> Result<String> {
+        let store = match class {
+            Class::Grad => &mut self.mom,
+            _ => &mut self.params,
+        };
+        let mut sizes = Vec::with_capacity(store.len());
+        let mut shapes = Vec::with_capacity(store.len());
+        for lit in store.iter() {
+            let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            sizes.push(dims.iter().product::<usize>());
+            shapes.push(dims);
+        }
+        let (t, i, bit) = inj.flip_site(store.len(), |k| sizes[k]);
+        let mut data = crate::runtime::to_vec_f32(&store[t])?;
+        let old = data[i];
+        data[i] = f32::from_bits(old.to_bits() ^ (1u32 << bit));
+        let new = data[i];
+        store[t] = literal_f32(&data, &shapes[t])?;
+        Ok(format!(
+            "flipped bit {bit} of {class:?} tensor {t} elem {i}: {old:e} -> {new:e}"
+        ))
+    }
+
     /// Fill the training batch buffers from a batcher.
     pub fn fill_batch(&mut self, b: &mut Batcher) {
         b.next_into(&mut self.x_buf, &mut self.y_buf);
@@ -247,26 +302,108 @@ pub struct StepOutput {
     pub prec_used: PrecState,
 }
 
-/// Drive a full experiment: data, loop, eval, metrics, checkpoints.
+/// Advance a fresh batch stream past `n` consumed batches — deterministic
+/// replay after a resume or rollback (each iteration consumes exactly one
+/// batch, so the stream position equals the iteration number).
+fn skip_batches(trainer: &mut Trainer, batcher: &mut Batcher, n: u64) {
+    for _ in 0..n {
+        trainer.fill_batch(batcher);
+    }
+}
+
+/// Drive a full experiment: data, loop, eval, metrics, checkpoints —
+/// wrapped in the resilience harness (divergence watchdog, rollback with
+/// precision escalation, bounded retries, fault injection).
 pub fn run_experiment(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<History> {
     let mut cfg = cfg.clone();
     let eval_batch = rt.manifest.eval_batch;
     // size the synthetic test set to a multiple of the eval batch
     cfg.test_n = cfg.test_n.div_ceil(eval_batch) * eval_batch;
-    let (train, test, source) = crate::data::load_default(cfg.train_n, cfg.test_n);
+
+    let mut injector = FaultInjector::from_specs(&cfg.faults, cfg.fault_seed)?;
+    if !injector.is_empty() {
+        crate::log_warn!(
+            "fault injection armed: {:?} (seed {})",
+            cfg.faults,
+            cfg.fault_seed
+        );
+    }
+
+    let (train, test, source) = retry_with_backoff("dataset load", 3, 50, |_| {
+        if let Some(e) = injector.take_read_failure("dataset") {
+            return Err(e);
+        }
+        Ok(crate::data::load_default(cfg.train_n, cfg.test_n))
+    })?;
     crate::log_info!(
         "experiment: scheme={} model={} iters={} data={:?} (train={}, test={})",
         cfg.scheme, cfg.model, cfg.iters, source, train.n, test.n
     );
     let mut trainer = Trainer::new(rt, cfg.clone())?;
     let mut batcher = Batcher::new(&train, trainer.train_batch_size(), cfg.seed);
-
     let ckpt_dir = cfg.checkpoint_dir.clone();
-    for iter in 0..cfg.iters {
+
+    let mut iter: u64 = 0;
+    if cfg.resume {
+        let dir = ckpt_dir
+            .as_deref()
+            .context("resume=true requires a checkpoint dir")?;
+        match checkpoint::load_latest(dir, &mut trainer) {
+            Ok(next) => {
+                crate::log_info!("resume: continuing from iter {next}");
+                trainer.history.recovery.push(RecoveryEvent {
+                    iter: next,
+                    kind: "resume".into(),
+                    detail: format!("resumed from checkpoint at iter {}", next - 1),
+                    rollback_to: None,
+                });
+                skip_batches(&mut trainer, &mut batcher, next);
+                iter = next;
+            }
+            Err(e) => {
+                crate::log_warn!("resume: no usable checkpoint ({e:#}); starting fresh")
+            }
+        }
+    }
+
+    // The watchdog only arms for policies that can respond (static
+    // baselines must keep their divergence — it *is* the §5 experiment).
+    let armed = cfg.watchdog && trainer.policy.can_escalate();
+    let mut watchdog = Watchdog::new(WatchdogConfig {
+        loss_ratio: cfg.loss_explode_ratio as f32,
+        warmup: cfg.watchdog_warmup,
+        r_trip: cfg.overflow_trip as f32,
+        r_window: cfg.overflow_window,
+    });
+    let mut retries: u64 = 0;
+
+    while iter < cfg.iters {
+        if let Some(class) = injector.bitflip(iter) {
+            let detail = trainer.corrupt_value(class, &mut injector)?;
+            crate::log_warn!("iter {iter}: fault injected: {detail}");
+            trainer.history.recovery.push(RecoveryEvent {
+                iter,
+                kind: "fault_bitflip".into(),
+                detail,
+                rollback_to: None,
+            });
+        }
+
         trainer.fill_batch(&mut batcher);
         let t = Stopwatch::start();
-        let out = trainer.step(iter)?;
+        let mut out = trainer.step(iter)?;
         let step_ms = t.elapsed_ms();
+        if let Some(forced) = injector.loss_override(iter) {
+            crate::log_warn!("iter {iter}: fault injected: loss forced to {forced}");
+            trainer.history.recovery.push(RecoveryEvent {
+                iter,
+                kind: "fault_loss".into(),
+                detail: format!("loss forced to {forced}"),
+                rollback_to: None,
+            });
+            out.loss = forced;
+            out.fb.loss = forced;
+        }
 
         let last = iter + 1 == cfg.iters;
         if cfg.log_every > 0 && (iter % cfg.log_every == 0 || last) {
@@ -286,6 +423,95 @@ pub fn run_experiment(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<Histor
                 out.prec_used.grads
             );
         }
+
+        // Watchdog runs before eval/checkpoint so a poisoned state is
+        // neither evaluated nor persisted as a rollback target.
+        if armed {
+            if let Some(trip) = watchdog.observe(&out.fb) {
+                retries += 1;
+                crate::log_warn!(
+                    "iter {iter}: watchdog tripped: {trip} (recovery {retries}/{})",
+                    cfg.max_recoveries
+                );
+                if retries > cfg.max_recoveries {
+                    trainer.history.recovery.push(RecoveryEvent {
+                        iter,
+                        kind: "abort".into(),
+                        detail: trip.to_string(),
+                        rollback_to: None,
+                    });
+                    let report = FailureReport {
+                        scheme: cfg.scheme.clone(),
+                        model: cfg.model.clone(),
+                        iter,
+                        attempts: retries - 1,
+                        reason: trip.to_string(),
+                    };
+                    let path = report.write(&cfg.out_dir, &trainer.history)?;
+                    anyhow::bail!(
+                        "run aborted after {} recovery attempts ({trip}); \
+                         report: {}",
+                        retries - 1,
+                        path.display()
+                    );
+                }
+                // Roll back: newest complete checkpoint, else a fresh
+                // initialization; then escalate precision and replay.
+                let restored = match ckpt_dir.as_deref() {
+                    Some(d) => match checkpoint::load_latest(d, &mut trainer) {
+                        Ok(next) => Some(next),
+                        Err(e) => {
+                            crate::log_warn!(
+                                "rollback: {e:#}; restarting from initialization"
+                            );
+                            None
+                        }
+                    },
+                    None => None,
+                };
+                let resume_iter = match restored {
+                    Some(next) => next,
+                    None => {
+                        trainer.reinit(rt)?;
+                        0
+                    }
+                };
+                trainer.prec = trainer.policy.escalate(trainer.prec, trip.class());
+                crate::log_info!(
+                    "iter {iter}: rolled back to iter {resume_iter}; escalated \
+                     to w={} a={} g={}",
+                    trainer.prec.weights,
+                    trainer.prec.acts,
+                    trainer.prec.grads
+                );
+                trainer.history.recovery.push(RecoveryEvent {
+                    iter,
+                    kind: trip.kind().into(),
+                    detail: trip.to_string(),
+                    rollback_to: Some(resume_iter),
+                });
+                // records past the rollback point describe undone work
+                trainer.history.train.retain(|r| r.iter < resume_iter);
+                trainer.history.eval.retain(|r| r.iter < resume_iter);
+                batcher = Batcher::new(&train, trainer.train_batch_size(), cfg.seed);
+                skip_batches(&mut trainer, &mut batcher, resume_iter);
+                let backoff = cfg
+                    .recovery_backoff
+                    .saturating_mul(1u64 << (retries - 1).min(16));
+                watchdog.hold_until(resume_iter + backoff);
+                watchdog.reset_baseline();
+                iter = resume_iter;
+                continue;
+            }
+        } else if !out.loss.is_finite() {
+            // static-format divergence (the §5 demonstration): record and
+            // keep going — the figure needs the whole (diverged) curve
+            crate::log_warn!(
+                "iter {iter}: loss is not finite ({} divergence)",
+                trainer.policy.name()
+            );
+        }
+
         if (cfg.eval_every > 0 && iter % cfg.eval_every == 0 && iter > 0) || last {
             let (tl, ta) = trainer.evaluate(&test)?;
             trainer.history.eval.push(EvalRecord {
@@ -309,11 +535,7 @@ pub fn run_experiment(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<Histor
                 checkpoint::save(dir, &trainer, iter)?;
             }
         }
-        if !out.loss.is_finite() && trainer.policy.name() == "fixed" {
-            // the §5 divergence demonstration: record and keep going — the
-            // figure needs the whole (diverged) curve
-            crate::log_warn!("iter {iter}: loss is not finite (fixed-precision divergence)");
-        }
+        iter += 1;
     }
     Ok(trainer.history)
 }

@@ -1,0 +1,225 @@
+//! End-to-end resilience: fault injection → watchdog trip → rollback with
+//! precision escalation → deterministic replay → clean completion; plus
+//! torn-checkpoint resume and the graceful-abort path.
+
+use qedps::config::ExperimentConfig;
+use qedps::runtime::Runtime;
+use qedps::trainer::{checkpoint, run_experiment, Trainer};
+
+fn quick_cfg(scheme: &str, tag: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp".into();
+    cfg.scheme = scheme.into();
+    cfg.iters = 40;
+    cfg.train_n = 1000;
+    cfg.test_n = 200;
+    cfg.eval_every = 0;
+    cfg.log_every = 1;
+    cfg.out_dir = std::env::temp_dir()
+        .join(format!("qedps_rtest_{tag}"))
+        .to_string_lossy()
+        .into_owned();
+    cfg
+}
+
+fn fresh_dir(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("qedps_rtest_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir.to_string_lossy().into_owned()
+}
+
+/// The acceptance scenario: a bit-flipped weight tensor plus a forced NaN
+/// loss mid-run.  The watchdog must trip, roll back to the last good
+/// checkpoint, escalate precision, and the run must still complete with a
+/// finite loss and the whole recovery trail in the summary.
+#[test]
+fn injected_faults_roll_back_escalate_and_complete() {
+    let mut rt = Runtime::create().unwrap();
+    let mut cfg = quick_cfg("qedps", "faults_out");
+    cfg.checkpoint_dir = Some(fresh_dir("faults_ckpt"));
+    cfg.checkpoint_every = 5;
+    cfg.faults = vec!["bitflip@8:weight".into(), "nan@12".into()];
+    cfg.fault_seed = 7;
+    cfg.recovery_backoff = 2; // short grace so both faults can trip in 40 iters
+    let hist = run_experiment(&mut rt, &cfg).unwrap();
+
+    let s = hist.summary();
+    assert_eq!(s.status.as_str(), "ok", "run must complete cleanly");
+    assert!(s.final_train_loss.is_finite(), "loss {}", s.final_train_loss);
+    assert!(s.recoveries >= 1, "at least one rollback expected");
+
+    let kinds: Vec<&str> = hist.recovery.iter().map(|e| e.kind.as_str()).collect();
+    assert!(kinds.contains(&"fault_bitflip"), "trail {kinds:?}");
+    assert!(kinds.contains(&"fault_loss"), "trail {kinds:?}");
+    // every rollback names the iteration it rewound to
+    let rollbacks: Vec<_> =
+        hist.recovery.iter().filter(|e| e.rollback_to.is_some()).collect();
+    assert!(!rollbacks.is_empty());
+    for e in &rollbacks {
+        assert!(e.rollback_to.unwrap() <= e.iter, "{e:?}");
+    }
+    // poisoned records must not survive the rewind
+    assert!(hist.train.iter().all(|r| r.loss.is_finite()));
+
+    // the trail is exported in the summary JSON
+    let j = hist.summary_json();
+    assert_eq!(j.get("status").as_str(), Some("ok"));
+    assert!(j.get("recoveries").as_f64().unwrap() >= 1.0);
+    assert!(j.get("recovery_events").at(0).get("kind").as_str().is_some());
+}
+
+/// Surgical single-fault case with a fully deterministic rollback target:
+/// checkpoints land at iters 5 and 10, the NaN fires at 12, so the run must
+/// rewind to exactly iter 11 (= checkpoint 10 + 1) and escalate precision.
+#[test]
+fn forced_nan_rewinds_to_last_checkpoint() {
+    let mut rt = Runtime::create().unwrap();
+    let mut cfg = quick_cfg("qedps", "nan_out");
+    cfg.iters = 30;
+    cfg.checkpoint_dir = Some(fresh_dir("nan_ckpt"));
+    cfg.checkpoint_every = 5;
+    cfg.faults = vec!["nan@12".into()];
+    let hist = run_experiment(&mut rt, &cfg).unwrap();
+
+    let trips: Vec<_> = hist
+        .recovery
+        .iter()
+        .filter(|e| e.kind == "non_finite_loss")
+        .collect();
+    assert_eq!(trips.len(), 1, "trail {:?}", hist.recovery);
+    assert_eq!(trips[0].iter, 12);
+    assert_eq!(trips[0].rollback_to, Some(11));
+    assert_eq!(hist.summary().recoveries, 1);
+    assert_eq!(hist.summary().status.as_str(), "ok");
+
+    // escalation must be visible in the recorded precision: the first
+    // record after the rewind is at least as wide as the pre-trip one
+    let before = hist.train.iter().find(|r| r.iter == 10).expect("iter 10");
+    let after = hist.train.iter().find(|r| r.iter == 11).expect("iter 11");
+    assert!(
+        after.prec.mean_bits() + 1.0 > before.prec.mean_bits(),
+        "escalated {} vs {}",
+        after.prec.mean_bits(),
+        before.prec.mean_bits()
+    );
+}
+
+/// A torn (partial) checkpoint directory — state.json missing — and a
+/// leftover `.tmp` staging dir must both be skipped; resume lands on the
+/// newest checkpoint that validates.
+#[test]
+fn resume_skips_torn_and_staged_checkpoints() {
+    let mut rt = Runtime::create().unwrap();
+    let cfg = quick_cfg("qedps", "torn_out");
+    let dir = fresh_dir("torn_ckpt");
+
+    let (train, _, _) = qedps::data::load_default(cfg.train_n, cfg.test_n);
+    let mut t1 = Trainer::new(&mut rt, cfg.clone()).unwrap();
+    let mut b1 = qedps::data::Batcher::new(&train, t1.train_batch_size(), cfg.seed);
+    for i in 0..10 {
+        t1.fill_batch(&mut b1);
+        t1.step(i).unwrap();
+        if i == 4 || i == 9 {
+            checkpoint::save(&dir, &t1, i).unwrap();
+        }
+    }
+
+    let root = std::path::Path::new(&dir);
+    // tear the newest checkpoint: crash between tensor writes and state.json
+    std::fs::remove_file(root.join("state-9").join("state.json")).unwrap();
+    // and simulate a crash mid-stage: an abandoned temp dir
+    std::fs::create_dir_all(root.join("state-999.tmp")).unwrap();
+
+    let mut t2 = Trainer::new(&mut rt, cfg.clone()).unwrap();
+    let next = checkpoint::load_latest(&dir, &mut t2).unwrap();
+    assert_eq!(next, 5, "must fall back to the intact state-4");
+}
+
+/// A checkpoint whose tensor bytes were corrupted after writing must fail
+/// checksum validation and be skipped on resume.
+#[test]
+fn resume_skips_checksum_mismatch() {
+    let mut rt = Runtime::create().unwrap();
+    let cfg = quick_cfg("qedps", "sum_out");
+    let dir = fresh_dir("sum_ckpt");
+
+    let (train, _, _) = qedps::data::load_default(cfg.train_n, cfg.test_n);
+    let mut t1 = Trainer::new(&mut rt, cfg.clone()).unwrap();
+    let mut b1 = qedps::data::Batcher::new(&train, t1.train_batch_size(), cfg.seed);
+    for i in 0..8 {
+        t1.fill_batch(&mut b1);
+        t1.step(i).unwrap();
+        if i == 3 || i == 7 {
+            checkpoint::save(&dir, &t1, i).unwrap();
+        }
+    }
+
+    // flip one byte of a tensor payload in the newest checkpoint
+    let victim = std::path::Path::new(&dir).join("state-7").join("p_0.npy");
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    std::fs::write(&victim, bytes).unwrap();
+
+    let mut t2 = Trainer::new(&mut rt, cfg.clone()).unwrap();
+    let next = checkpoint::load_latest(&dir, &mut t2).unwrap();
+    assert_eq!(next, 4, "corrupt state-7 must be skipped for state-3");
+}
+
+/// `resume = true` continues a finished segment instead of restarting, and
+/// the resume itself is recorded as informational (not a recovery).
+#[test]
+fn resume_flag_continues_where_the_run_left_off() {
+    let mut rt = Runtime::create().unwrap();
+    let mut cfg = quick_cfg("qedps", "resume_out");
+    cfg.iters = 10;
+    cfg.checkpoint_dir = Some(fresh_dir("resume_ckpt"));
+    cfg.checkpoint_every = 5;
+    run_experiment(&mut rt, &cfg).unwrap();
+
+    cfg.iters = 20;
+    cfg.resume = true;
+    let hist = run_experiment(&mut rt, &cfg).unwrap();
+    assert!(hist.recovery.iter().any(|e| e.kind == "resume"));
+    assert_eq!(hist.summary().recoveries, 0, "a resume is not a recovery");
+    // segment 1 checkpointed its last iter (9), so segment 2 starts at 10
+    let first = hist.train.iter().map(|r| r.iter).min().unwrap();
+    assert_eq!(first, 10);
+    assert_eq!(hist.summary().status.as_str(), "ok");
+}
+
+/// Exhausting the retry budget aborts gracefully: the error names the
+/// report, and the report carries the recovery trail.
+#[test]
+fn exhausted_retries_abort_with_failure_report() {
+    let mut rt = Runtime::create().unwrap();
+    let mut cfg = quick_cfg("qedps", "abort_out");
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    cfg.iters = 10;
+    cfg.faults = vec!["nan@3".into()];
+    cfg.max_recoveries = 0;
+    let err = run_experiment(&mut rt, &cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("aborted"), "{err:#}");
+
+    let report_path = std::path::Path::new(&cfg.out_dir).join("failure_report.json");
+    let j = qedps::util::json::Json::parse(
+        &std::fs::read_to_string(&report_path).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(j.get("status").as_str(), Some("aborted"));
+    assert_eq!(j.get("scheme").as_str(), Some("qedps"));
+    let events = j.get("recovery_events");
+    assert!(events.at(0).get("kind").as_str().is_some(), "trail recorded");
+}
+
+/// Transient read failures are retried away: a single injected read-fail
+/// must not kill the run.
+#[test]
+fn transient_read_failure_is_retried() {
+    let mut rt = Runtime::create().unwrap();
+    let mut cfg = quick_cfg("qedps", "readfail_out");
+    cfg.iters = 5;
+    cfg.faults = vec!["read-fail".into()];
+    let hist = run_experiment(&mut rt, &cfg).unwrap();
+    assert_eq!(hist.summary().status.as_str(), "ok");
+}

@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build, test, lint, and a fault-recovery smoke run.
+#
+# Usage: scripts/tier1.sh [--no-smoke]
+#
+# The smoke step needs the AOT artifacts (`make artifacts`); pass
+# --no-smoke (or run without artifacts present — it is skipped with a
+# notice) on machines that only have the Rust toolchain.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+NO_SMOKE=0
+for arg in "$@"; do
+    case "$arg" in
+        --no-smoke) NO_SMOKE=1 ;;
+        *) echo "unknown flag: $arg" >&2; exit 2 ;;
+    esac
+done
+
+echo "== tier1: cargo build --release =="
+cargo build --release
+
+echo "== tier1: cargo test =="
+cargo test -q
+
+echo "== tier1: clippy (deny warnings) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "clippy not installed; skipping lint"
+fi
+
+if [ "$NO_SMOKE" -eq 1 ]; then
+    echo "== tier1: smoke skipped (--no-smoke) =="
+elif [ -f artifacts/manifest.json ] || [ -n "${QEDPS_ARTIFACTS:-}" ]; then
+    echo "== tier1: fault-recovery smoke =="
+    cargo run --release --example fault_recovery
+else
+    echo "== tier1: smoke skipped (no artifacts; run 'make artifacts') =="
+fi
+
+echo "== tier1: OK =="
