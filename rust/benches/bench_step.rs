@@ -20,11 +20,17 @@ fn bench_model(rt: &mut Runtime, model: &str, scheme: &str) -> anyhow::Result<()
     let mut batcher = Batcher::new(&ds, trainer.train_batch_size(), 1);
     let mut iter = 0u64;
     let opts = BenchOpts { warmup_iters: 3, min_iters: 10, min_time_s: 2.0 };
+    let builds_before = qedps::runtime::literal_builds();
     qedps::bench::bench_with(&format!("step/{model}/{scheme}"), &opts, || {
         trainer.fill_batch(&mut batcher);
         iter += 1;
         black_box(trainer.step(iter).unwrap().loss);
     });
+    // pinned-input invariant: the timed loop must not construct literals
+    anyhow::ensure!(
+        qedps::runtime::literal_builds() == builds_before,
+        "step/{model}/{scheme} built literals inside the hot loop"
+    );
     Ok(())
 }
 

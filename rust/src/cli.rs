@@ -92,6 +92,11 @@ impl Args {
     pub fn switch(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key)
     }
+
+    /// Positional argument by index (`repro ckpt prune` → `pos(0) == "prune"`).
+    pub fn pos(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(|s| s.as_str())
+    }
 }
 
 impl Spec {
@@ -128,6 +133,8 @@ mod tests {
         assert_eq!(a.flag("iters"), Some("100"));
         assert!(a.switch("verbose"));
         assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.pos(0), Some("pos1"));
+        assert_eq!(a.pos(1), None);
         assert_eq!(a.flag_parse::<u64>("iters").unwrap(), Some(100));
     }
 

@@ -52,6 +52,9 @@ pub struct ExperimentConfig {
     /// Optional checkpoint directory.
     pub checkpoint_dir: Option<String>,
     pub checkpoint_every: u64,
+    /// Keep only the newest N `state-<iter>` checkpoint dirs after each
+    /// successful save (0 = never prune).
+    pub keep_checkpoints: u64,
     /// Divergence watchdog master switch (only arms for policies that can
     /// escalate — static baselines keep their divergence behaviour).
     pub watchdog: bool,
@@ -100,6 +103,7 @@ impl Default for ExperimentConfig {
             out_dir: "target/experiments".into(),
             checkpoint_dir: None,
             checkpoint_every: 1000,
+            keep_checkpoints: 3,
             watchdog: true,
             loss_explode_ratio: 4.0,
             watchdog_warmup: 20,
@@ -196,6 +200,9 @@ impl ExperimentConfig {
             "force_rounding" => self.force_rounding = Some(want_str()?),
             "checkpoint.dir" | "checkpoint_dir" => self.checkpoint_dir = Some(want_str()?),
             "checkpoint.every" | "checkpoint_every" => self.checkpoint_every = want_u()?,
+            "resilience.keep_checkpoints" | "checkpoint.keep" | "keep_checkpoints" => {
+                self.keep_checkpoints = want_u()?
+            }
             "resilience.watchdog" | "watchdog" => {
                 self.watchdog = val.as_bool().context("expected bool")?
             }
@@ -249,6 +256,16 @@ mod tests {
         assert_eq!(c.power, 0.75);
         assert_eq!(c.e_max, 1e-4);
         assert_eq!(c.r_max, 1e-4);
+        assert_eq!(c.keep_checkpoints, 3, "checkpoint GC defaults to keep-3");
+    }
+
+    #[test]
+    fn keep_checkpoints_aliases() {
+        let mut c = ExperimentConfig::default();
+        c.apply_set("checkpoint.keep=0").unwrap();
+        assert_eq!(c.keep_checkpoints, 0);
+        c.apply_set("keep_checkpoints=7").unwrap();
+        assert_eq!(c.keep_checkpoints, 7);
     }
 
     #[test]
@@ -295,6 +312,7 @@ mod tests {
             max_retries = 5
             backoff = 25
             resume = true
+            keep_checkpoints = 5
             [faults]
             inject = ["nan@12", "bitflip@3:grad"]
             seed = 99
@@ -311,6 +329,7 @@ mod tests {
         assert_eq!(c.max_recoveries, 5);
         assert_eq!(c.recovery_backoff, 25);
         assert!(c.resume);
+        assert_eq!(c.keep_checkpoints, 5);
         assert_eq!(c.faults, vec!["nan@12".to_string(), "bitflip@3:grad".to_string()]);
         assert_eq!(c.fault_seed, 99);
     }

@@ -44,17 +44,21 @@ pub fn fig3(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<History> {
     Ok(hist)
 }
 
-/// **Figure 4**: accuracy curves — DPS vs float32 vs fixed-13-bit.
-pub fn fig4(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<Vec<(String, History)>> {
-    let mut out = Vec::new();
-    for scheme in ["qedps", "float", "fixed13"] {
-        let mut c = cfg.clone();
-        c.scheme = scheme.into();
-        let hist = super::run_and_record(rt, &c, &format!("fig4_{}_{scheme}", c.model))?;
-        out.push((scheme.to_string(), hist));
+/// The Fig-4 scheme lineup: DPS vs float32 vs fixed-13-bit.
+pub const FIG4_SCHEMES: [&str; 3] = ["qedps", "float", "fixed13"];
+
+fn fig4_one(rt: &mut Runtime, cfg: &ExperimentConfig, scheme: &str) -> Result<History> {
+    let mut c = cfg.clone();
+    c.scheme = scheme.into();
+    if let Some(d) = &cfg.checkpoint_dir {
+        c.checkpoint_dir = Some(format!("{d}/fig4_{}_{scheme}", c.model));
     }
+    super::run_and_record(rt, &c, &format!("fig4_{}_{scheme}", c.model))
+}
+
+fn render_fig4(out: &[(String, History)]) {
     println!("\nFigure 4 — test accuracy: DPS vs float vs fixed-13");
-    for (scheme, hist) in &out {
+    for (scheme, hist) in out {
         let series: Vec<(f64, f64)> = hist
             .eval
             .iter()
@@ -64,6 +68,34 @@ pub fn fig4(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<Vec<(String, His
         let s = hist.summary();
         println!("  {scheme}: final={:.4} best={:.4}", s.final_test_acc, s.best_test_acc);
     }
+}
+
+/// **Figure 4**: accuracy curves, run serially on the caller's runtime.
+pub fn fig4(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<Vec<(String, History)>> {
+    let mut out = Vec::new();
+    for scheme in FIG4_SCHEMES {
+        out.push((scheme.to_string(), fig4_one(rt, cfg, scheme)?));
+    }
+    render_fig4(&out);
+    Ok(out)
+}
+
+/// **Figure 4**, sharded: the three scheme runs are independent, so they
+/// dispatch through [`super::sharder::run_sharded`] (`--jobs`/`--shard`)
+/// and merge back in lineup order — identical output to [`fig4`].
+pub fn fig4_sharded(
+    cfg: &ExperimentConfig,
+    opts: &super::ShardOpts,
+) -> Result<Vec<(String, History)>> {
+    let hists = super::sharder::run_sharded(&FIG4_SCHEMES, opts, |rt, _idx, scheme| {
+        fig4_one(rt, cfg, scheme)
+    })?;
+    let out: Vec<(String, History)> = FIG4_SCHEMES
+        .iter()
+        .zip(hists)
+        .filter_map(|(s, h)| h.map(|h| (s.to_string(), h)))
+        .collect();
+    render_fig4(&out);
     Ok(out)
 }
 

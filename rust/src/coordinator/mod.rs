@@ -1,7 +1,14 @@
 //! Experiment drivers: everything `repro <cmd>` runs to regenerate the
 //! paper's figures and tables (DESIGN.md §3 experiment index).
+//!
+//! Multi-run sweeps (`compare`, Fig. 4) dispatch through
+//! [`sharder::run_sharded`]: `--jobs N` fans runs out across worker
+//! threads (each with its own [`Runtime`]), `--shard i/n` partitions a
+//! sweep across subprocesses, and results always merge in input order so
+//! the emitted tables are byte-identical to a serial run.
 
 pub mod figures;
+pub mod sharder;
 
 use anyhow::Result;
 
@@ -10,6 +17,8 @@ use crate::metrics::History;
 use crate::runtime::Runtime;
 use crate::trainer::run_experiment;
 use crate::util::json::Json;
+
+pub use sharder::{Shard, ShardOpts};
 
 /// Run one configured experiment, write its CSV/JSON records, return the
 /// history.
@@ -43,50 +52,81 @@ pub struct CompareRow {
     pub mean_g_bits: f64,
     pub converged: bool,
     pub hw_speedup: f64,
+    /// Watchdog trips observed during the run (PR-6 follow-up: surfaced in
+    /// the table so a scheme that only finished by leaning on recovery is
+    /// visible at a glance).
+    pub watchdog_trips: u64,
+    /// Rollbacks actually performed.
+    pub recoveries: u64,
+}
+
+/// One scheme's comparison run: train, record, fold into a table row.
+fn compare_one(rt: &mut Runtime, base: &ExperimentConfig, scheme: &str) -> Result<CompareRow> {
+    let mut cfg = base.clone();
+    cfg.scheme = scheme.to_string();
+    let tag = format!("compare_{}_{scheme}", cfg.model);
+    // per-scheme checkpoint subdir: concurrent runs must not share (or
+    // cross-restore) rollback state
+    if let Some(d) = &base.checkpoint_dir {
+        cfg.checkpoint_dir = Some(format!("{d}/{tag}"));
+    }
+    let hist = run_and_record(rt, &cfg, &tag)?;
+    let s = hist.summary();
+    let speedup = figures::history_speedup(rt, &cfg.model, &hist)?;
+    Ok(CompareRow {
+        scheme: scheme.to_string(),
+        final_acc: s.final_test_acc,
+        best_acc: s.best_test_acc,
+        mean_w_bits: s.mean_weight_bits,
+        mean_a_bits: s.mean_act_bits,
+        mean_g_bits: s.mean_grad_bits,
+        // "converged" = ends well, not merely "passed through a good
+        // state" (fixed-13 famously peaks then collapses — paper §5).
+        converged: s.final_train_loss.is_finite() && s.final_test_acc > 0.5,
+        hw_speedup: speedup,
+        watchdog_trips: s.watchdog_trips,
+        recoveries: s.recoveries,
+    })
 }
 
 /// Run every scheme on the same workload (Table 1) and compute the MAC-sim
-/// speedup of each measured trajectory.
+/// speedup of each measured trajectory — serially, on the caller's runtime.
 pub fn compare_schemes(
     rt: &mut Runtime,
     base: &ExperimentConfig,
     schemes: &[&str],
 ) -> Result<Vec<CompareRow>> {
-    let mut rows = Vec::new();
-    for scheme in schemes {
-        let mut cfg = base.clone();
-        cfg.scheme = scheme.to_string();
-        let hist = run_and_record(rt, &cfg, &format!("compare_{}_{}", cfg.model, scheme))?;
-        let s = hist.summary();
-        let speedup = figures::history_speedup(rt, &cfg.model, &hist)?;
-        rows.push(CompareRow {
-            scheme: scheme.to_string(),
-            final_acc: s.final_test_acc,
-            best_acc: s.best_test_acc,
-            mean_w_bits: s.mean_weight_bits,
-            mean_a_bits: s.mean_act_bits,
-            mean_g_bits: s.mean_grad_bits,
-            // "converged" = ends well, not merely "passed through a good
-            // state" (fixed-13 famously peaks then collapses — paper §5).
-            converged: s.final_train_loss.is_finite() && s.final_test_acc > 0.5,
-            hw_speedup: speedup,
-        });
-    }
-    Ok(rows)
+    schemes.iter().map(|s| compare_one(rt, base, s)).collect()
+}
+
+/// Sharded Table-1 sweep: independent scheme runs dispatched through
+/// [`sharder::run_sharded`] (worker threads and/or a `--shard i/n` slice),
+/// merged back in scheme order.  With `jobs = 1` and no shard this is
+/// equivalent to [`compare_schemes`] — same rows, same bytes.
+pub fn compare_schemes_sharded(
+    base: &ExperimentConfig,
+    schemes: &[&str],
+    opts: &ShardOpts,
+) -> Result<Vec<CompareRow>> {
+    let rows = sharder::run_sharded(schemes, opts, |rt, _idx, scheme| {
+        compare_one(rt, base, scheme)
+    })?;
+    Ok(rows.into_iter().flatten().collect())
 }
 
 pub fn print_compare_table(rows: &[CompareRow]) {
     println!(
-        "\n{:<13} {:>9} {:>9} {:>8} {:>8} {:>8} {:>10} {:>9}",
+        "\n{:<13} {:>9} {:>9} {:>8} {:>8} {:>8} {:>10} {:>9} {:>6} {:>6}",
         "scheme", "final_acc", "best_acc", "w_bits", "a_bits", "g_bits",
-        "converged", "hw_speed"
+        "converged", "hw_speed", "trips", "recov"
     );
-    println!("{}", "-".repeat(82));
+    println!("{}", "-".repeat(96));
     for r in rows {
         println!(
-            "{:<13} {:>9.4} {:>9.4} {:>8.1} {:>8.1} {:>8.1} {:>10} {:>8.2}x",
+            "{:<13} {:>9.4} {:>9.4} {:>8.1} {:>8.1} {:>8.1} {:>10} {:>8.2}x {:>6} {:>6}",
             r.scheme, r.final_acc, r.best_acc, r.mean_w_bits, r.mean_a_bits,
-            r.mean_g_bits, if r.converged { "yes" } else { "NO" }, r.hw_speedup
+            r.mean_g_bits, if r.converged { "yes" } else { "NO" }, r.hw_speedup,
+            r.watchdog_trips, r.recoveries
         );
     }
     println!();
@@ -105,6 +145,8 @@ pub fn compare_rows_json(rows: &[CompareRow]) -> Json {
                     ("mean_g_bits", Json::Num(r.mean_g_bits)),
                     ("converged", Json::Bool(r.converged)),
                     ("hw_speedup", Json::Num(r.hw_speedup)),
+                    ("watchdog_trips", Json::Num(r.watchdog_trips as f64)),
+                    ("recoveries", Json::Num(r.recoveries as f64)),
                 ])
             })
             .collect(),

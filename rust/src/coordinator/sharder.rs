@@ -1,0 +1,186 @@
+//! Deterministic fan-out of independent experiment runs.
+//!
+//! The paper's headline artifacts are *sweeps* — one run per scheme
+//! (Table 1 / Fig. 4) or per rounding mode — and the runs share nothing
+//! but the config template, so they shard trivially.  Two axes:
+//!
+//! - `--jobs N`: worker threads inside this process.  [`Runtime`] holds an
+//!   `Rc` executable cache and is not `Send`, so each worker constructs its
+//!   **own** runtime (PJRT client + compile cache) and pulls run indices
+//!   off a shared atomic queue.
+//! - `--shard i/n`: subprocess-level partitioning for multi-machine use.
+//!   Shard *i* claims every index with `idx % n == i-1`; unclaimed indices
+//!   come back as `None` and the caller merges tables across shards.
+//!
+//! Results are returned **indexed by input position**, never by completion
+//! order, so merged CSV/JSON output is byte-identical whether a sweep ran
+//! serially, threaded, or sharded — the determinism tests in
+//! `tests/sharding_equivalence.rs` pin this down.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Runtime;
+
+/// One subprocess's slice of a sweep: this shard owns every run index with
+/// `idx % of == index` (stored 0-based; parsed from 1-based `i/n`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub of: usize,
+}
+
+impl Shard {
+    /// Parse `"i/n"` (1-based, e.g. `--shard 2/4` is the second of four).
+    pub fn parse(s: &str) -> Result<Shard> {
+        let (i, n) = s
+            .split_once('/')
+            .with_context(|| format!("--shard wants i/n, got '{s}'"))?;
+        let i: usize = i.trim().parse().with_context(|| format!("shard index '{i}'"))?;
+        let n: usize = n.trim().parse().with_context(|| format!("shard count '{n}'"))?;
+        anyhow::ensure!(n >= 1, "shard count must be >= 1");
+        anyhow::ensure!(
+            (1..=n).contains(&i),
+            "shard index {i} out of range 1..={n}"
+        );
+        Ok(Shard { index: i - 1, of: n })
+    }
+
+    pub fn selects(&self, idx: usize) -> bool {
+        idx % self.of == self.index
+    }
+}
+
+/// How to dispatch a sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardOpts {
+    /// Worker threads (1 = run in the calling thread).
+    pub jobs: usize,
+    /// Optional subprocess-level partition.
+    pub shard: Option<Shard>,
+}
+
+impl Default for ShardOpts {
+    fn default() -> Self {
+        ShardOpts { jobs: 1, shard: None }
+    }
+}
+
+/// Runtime construction mutates process env (`XLA_FLAGS`) on first use;
+/// serialize it so concurrent workers never race `set_var`/`var_os`.
+static RUNTIME_INIT: Mutex<()> = Mutex::new(());
+
+fn new_runtime() -> Result<Runtime> {
+    let _guard = RUNTIME_INIT.lock().unwrap_or_else(|p| p.into_inner());
+    Runtime::create()
+}
+
+/// Run `f` over every selected spec, each worker with its own [`Runtime`],
+/// and return results **by input index** (deterministic merge regardless
+/// of completion order).  Sharded-out indices are `None`.  The first run
+/// error (or runtime-construction error) fails the whole sweep.
+pub fn run_sharded<S, R, F>(specs: &[S], opts: &ShardOpts, f: F) -> Result<Vec<Option<R>>>
+where
+    S: Sync,
+    R: Send,
+    F: Fn(&mut Runtime, usize, &S) -> Result<R> + Sync,
+{
+    let selected: Vec<usize> = (0..specs.len())
+        .filter(|&i| opts.shard.map(|s| s.selects(i)).unwrap_or(true))
+        .collect();
+    if let Some(s) = opts.shard {
+        crate::log_info!(
+            "sharder: shard {}/{} owns {} of {} runs",
+            s.index + 1,
+            s.of,
+            selected.len(),
+            specs.len()
+        );
+    }
+
+    let mut slots: Vec<Option<Result<R>>> = Vec::with_capacity(specs.len());
+    slots.resize_with(specs.len(), || None);
+
+    let workers = opts.jobs.max(1).min(selected.len().max(1));
+    if workers <= 1 {
+        // serial path: same claim order, same merge semantics, one runtime
+        let mut rt = new_runtime()?;
+        for &idx in &selected {
+            slots[idx] = Some(f(&mut rt, idx, &specs[idx]));
+        }
+    } else {
+        let queue = AtomicUsize::new(0);
+        let out = Mutex::new(&mut slots);
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let queue = &queue;
+                let out = &out;
+                let selected = &selected;
+                let f = &f;
+                scope.spawn(move || {
+                    // lazily built: a worker that never claims work never
+                    // pays for a PJRT client
+                    let mut rt: Option<Result<Runtime>> = None;
+                    loop {
+                        let k = queue.fetch_add(1, Ordering::Relaxed);
+                        if k >= selected.len() {
+                            break;
+                        }
+                        let idx = selected[k];
+                        let res = match rt.get_or_insert_with(new_runtime) {
+                            Ok(r) => f(r, idx, &specs[idx]),
+                            Err(e) => Err(anyhow::anyhow!(
+                                "worker {w}: creating runtime: {e:#}"
+                            )),
+                        };
+                        let mut guard = out.lock().unwrap_or_else(|p| p.into_inner());
+                        guard[idx] = Some(res);
+                    }
+                });
+            }
+        });
+    }
+
+    let mut merged = Vec::with_capacity(specs.len());
+    for (idx, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(Ok(r)) => merged.push(Some(r)),
+            Some(Err(e)) => return Err(e.context(format!("sweep run {idx} failed"))),
+            None => merged.push(None),
+        }
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_parse_accepts_one_based() {
+        assert_eq!(Shard::parse("1/3").unwrap(), Shard { index: 0, of: 3 });
+        assert_eq!(Shard::parse("3/3").unwrap(), Shard { index: 2, of: 3 });
+        assert_eq!(Shard::parse(" 2 / 4 ").unwrap(), Shard { index: 1, of: 4 });
+        assert!(Shard::parse("0/3").is_err(), "index is 1-based");
+        assert!(Shard::parse("4/3").is_err());
+        assert!(Shard::parse("1/0").is_err());
+        assert!(Shard::parse("nope").is_err());
+        assert!(Shard::parse("1").is_err());
+    }
+
+    #[test]
+    fn shards_partition_exactly() {
+        // every index is owned by exactly one of the n shards
+        for n in 1..=5 {
+            let shards: Vec<Shard> = (1..=n)
+                .map(|i| Shard::parse(&format!("{i}/{n}")).unwrap())
+                .collect();
+            for idx in 0..37 {
+                let owners = shards.iter().filter(|s| s.selects(idx)).count();
+                assert_eq!(owners, 1, "idx {idx} with {n} shards");
+            }
+        }
+    }
+}

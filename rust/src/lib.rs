@@ -10,15 +10,20 @@
 //! * [`policy`] — the paper's contribution: the `<IL, FL>` controllers
 //!   (quantization-error + overflow driven scaling, plus every baseline the
 //!   paper compares against);
-//! * [`trainer`] — the training loop: batches in, stats out, precision
-//!   re-decided each iteration;
+//! * [`trainer`] — the training loop, split into three layers:
+//!   [`trainer::StepEngine`] (compiled executables + pre-pinned input
+//!   literals; the zero-allocation step hot path), [`trainer::Session`]
+//!   (experiment lifecycle: data, watchdog, rollback, checkpoints), and the
+//!   thin [`trainer::Trainer`] facade (policy + history around the engine);
 //! * [`fixedpoint`] — bit-exact software mirror of the L1 quantizer (used
 //!   by parity tests, the MAC simulator and the policy unit tests);
 //! * [`data`] — MNIST IDX loader + the offline synthetic-digit substitute;
 //! * [`macsim`] — cycle model of Na & Mukhopadhyay's flexible MAC unit
 //!   (turns measured bit-width trajectories into hardware speedup);
 //! * [`coordinator`] — experiment drivers that regenerate every figure and
-//!   table in the paper;
+//!   table in the paper; multi-run sweeps dispatch through
+//!   [`coordinator::sharder`] (`--jobs` worker threads, `--shard i/n`
+//!   subprocess slices) with deterministic, byte-identical merges;
 //! * [`resilience`] — divergence watchdog, fault injection, retry/backoff
 //!   and failure reporting (the run-survival layer around [`trainer`]);
 //! * [`util`], [`config`], [`cli`], [`metrics`], [`bench`], [`testutil`] —

@@ -2,19 +2,21 @@
 //!
 //! ```text
 //! repro train    [--model M] [--scheme S] [--iters N] [--config F] [--set k=v]...
-//! repro figures  --fig 3|4   [same flags]           regenerate paper figures
-//! repro compare  [--schemes a,b,c]                  Table-1 head-to-head
+//! repro figures  --fig 3|4   [--jobs N] [--shard i/n]  regenerate paper figures
+//! repro compare  [--schemes a,b,c] [--jobs N] [--shard i/n]  Table-1 head-to-head
 //! repro rounding-ab                                 Eq.1 vs Eq.2 A/B
 //! repro macsim   [--model M]                        flexible-MAC speedup table
+//! repro bench step [--model M] [--scheme S]         step-loop micro-benchmark
+//! repro ckpt list|verify|prune --checkpoint-dir D   checkpoint maintenance
 //! repro gen-data --out DIR [--n N]                  write synthetic IDX files
 //! repro info                                        artifact/manifest summary
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use qedps::cli::{Args, Spec};
 use qedps::config::ExperimentConfig;
-use qedps::coordinator::{self, figures};
+use qedps::coordinator::{self, figures, ShardOpts};
 use qedps::runtime::Runtime;
 
 const SPEC: Spec = Spec {
@@ -32,8 +34,11 @@ const SPEC: Spec = Spec {
         ("n", "N", "sample count (for `gen-data`)"),
         ("agg", "mean|max|last", "stat aggregation across sites"),
         ("checkpoint-dir", "DIR", "save checkpoints here"),
+        ("keep", "N", "checkpoints to keep (GC / `ckpt prune`); 0 = keep all"),
         ("fault", "SPEC", "inject a fault: nan@N|inf@N|bitflip@N[:weight|grad]|read-fail[:N] (repeatable)"),
         ("fault-seed", "N", "seed for fault-site selection"),
+        ("jobs", "N", "worker threads for multi-run sweeps (compare / fig 4)"),
+        ("shard", "i/n", "run only the i-th of n sweep shards (1-based)"),
     ],
     switches: &[
         ("help", "show usage"),
@@ -64,6 +69,9 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(d) = args.flag("checkpoint-dir") {
         cfg.checkpoint_dir = Some(d.into());
     }
+    if let Some(k) = args.flag_parse::<u64>("keep")? {
+        cfg.keep_checkpoints = k;
+    }
     for spec in args.flag_all("fault") {
         // fail fast on typos instead of mid-run
         qedps::resilience::parse_spec(spec)?;
@@ -84,6 +92,77 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+/// `repro bench step`: the step-loop micro-benchmark behind the pre-pinned
+/// literal refactor.  Reports step latency, asserts the hot loop performs
+/// zero per-iteration literal constructions, and prices what the
+/// pre-refactor build-a-literal-per-input path would cost on top.
+fn bench_step(cfg: &ExperimentConfig, iters: u64) -> Result<()> {
+    use qedps::bench::{bench_with, black_box, BenchOpts};
+    use qedps::data::Batcher;
+    use qedps::runtime::{literal_builds, literal_f32, literal_i32};
+    use qedps::trainer::Trainer;
+
+    let mut rt = Runtime::create()?;
+    let ds = qedps::data::synth::generate(512, 5);
+    let mut trainer = Trainer::new(&mut rt, cfg.clone())?;
+    let mut batcher = Batcher::new(&ds, trainer.train_batch_size(), cfg.seed);
+
+    println!(
+        "== bench step: {}/{} ({iters} timed iters) ==",
+        cfg.model, cfg.scheme
+    );
+    let opts = BenchOpts { warmup_iters: 3, min_iters: iters, min_time_s: 0.0 };
+    let mut iter = 0u64;
+    let before = literal_builds();
+    bench_with(
+        &format!("step/{}/{} (pinned inputs)", cfg.model, cfg.scheme),
+        &opts,
+        || {
+            trainer.fill_batch(&mut batcher);
+            black_box(trainer.step(iter).unwrap().loss);
+            iter += 1;
+        },
+    );
+    let builds = literal_builds() - before;
+    println!("literal builds across {iter} steps: {builds} (target: 0)");
+
+    // what the pre-refactor path paid per iteration: five input literals
+    // (x, y, lr, seed, prec) constructed from host buffers every step
+    let meta = rt.manifest.model(&cfg.model)?;
+    let mut x_shape = vec![rt.manifest.train_batch];
+    x_shape.extend(meta.input_shape.iter().copied());
+    let x_buf = vec![0.1f32; x_shape.iter().product()];
+    let y_buf = vec![1i32; rt.manifest.train_batch];
+    let prec_vec = [2.0f32, 14.0, 4.0, 12.0, 2.0, 20.0];
+    bench_with(
+        &format!("unpinned input build/{} (per-step cost removed)", cfg.model),
+        &opts,
+        || {
+            black_box(literal_f32(&x_buf, &x_shape).unwrap());
+            black_box(literal_i32(&y_buf, &[y_buf.len()]).unwrap());
+            black_box(literal_f32(&[0.01], &[]).unwrap());
+            black_box(literal_f32(&[1.0], &[]).unwrap());
+            black_box(literal_f32(&prec_vec, &[6]).unwrap());
+        },
+    );
+    anyhow::ensure!(
+        builds == 0,
+        "step loop constructed {builds} literals over {iter} iterations"
+    );
+    println!("ok: step hot path is literal-allocation-free");
+    Ok(())
+}
+
+fn shard_opts(args: &Args) -> Result<ShardOpts> {
+    Ok(ShardOpts {
+        jobs: args.flag_parse::<usize>("jobs")?.unwrap_or(1).max(1),
+        shard: args
+            .flag("shard")
+            .map(coordinator::Shard::parse)
+            .transpose()?,
+    })
+}
+
 fn main() -> Result<()> {
     qedps::util::logging::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -97,7 +176,9 @@ fn main() -> Result<()> {
     }
     if args.switch("help") || sub == "help" {
         print!("{}", SPEC.usage());
-        println!("\nsubcommands: train figures compare rounding-ab macsim gen-data info");
+        println!(
+            "\nsubcommands: train figures compare rounding-ab macsim bench ckpt gen-data info"
+        );
         return Ok(());
     }
 
@@ -123,22 +204,35 @@ fn main() -> Result<()> {
         }
         "figures" => {
             let cfg = build_config(&args)?;
-            let mut rt = Runtime::create()?;
+            let opts = shard_opts(&args)?;
+            let fig4_dispatch = |cfg: &ExperimentConfig| -> Result<()> {
+                // fan the three scheme runs out when asked; jobs=1 without a
+                // shard takes the same code path and emits identical output
+                if opts.jobs > 1 || opts.shard.is_some() {
+                    figures::fig4_sharded(cfg, &opts)?;
+                } else {
+                    let mut rt = Runtime::create()?;
+                    figures::fig4(&mut rt, cfg)?;
+                }
+                Ok(())
+            };
             match args.flag("fig") {
                 Some("3") => {
+                    let mut rt = Runtime::create()?;
                     figures::fig3(&mut rt, &cfg)?;
                 }
-                Some("4") => {
-                    figures::fig4(&mut rt, &cfg)?;
-                }
+                Some("4") => fig4_dispatch(&cfg)?,
                 _ => {
+                    let mut rt = Runtime::create()?;
                     figures::fig3(&mut rt, &cfg)?;
-                    figures::fig4(&mut rt, &cfg)?;
+                    drop(rt);
+                    fig4_dispatch(&cfg)?;
                 }
             }
         }
         "compare" => {
             let cfg = build_config(&args)?;
+            let opts = shard_opts(&args)?;
             let schemes_owned: Vec<String> = args
                 .flag("schemes")
                 .unwrap_or("qedps,na,courbariaux,gupta88,fixed13,float")
@@ -146,10 +240,16 @@ fn main() -> Result<()> {
                 .map(|s| s.trim().to_string())
                 .collect();
             let schemes: Vec<&str> = schemes_owned.iter().map(|s| s.as_str()).collect();
-            let mut rt = Runtime::create()?;
-            let rows = coordinator::compare_schemes(&mut rt, &cfg, &schemes)?;
+            // serial and threaded runs share one dispatch path, so
+            // `--jobs 2` emits byte-identical tables to `--jobs 1`
+            let rows = coordinator::compare_schemes_sharded(&cfg, &schemes, &opts)?;
             coordinator::print_compare_table(&rows);
-            let out = std::path::Path::new(&cfg.out_dir).join("compare.json");
+            let out_name = match opts.shard {
+                // each subprocess shard writes its slice; merge offline
+                Some(s) => format!("compare.shard-{}-of-{}.json", s.index + 1, s.of),
+                None => "compare.json".to_string(),
+            };
+            let out = std::path::Path::new(&cfg.out_dir).join(out_name);
             std::fs::create_dir_all(&cfg.out_dir)?;
             std::fs::write(&out, coordinator::compare_rows_json(&rows).to_string_pretty())?;
             println!("wrote {}", out.display());
@@ -163,6 +263,63 @@ fn main() -> Result<()> {
             let cfg = build_config(&args)?;
             let rt = Runtime::create()?;
             figures::macsim_report(&rt, &cfg.model)?;
+        }
+        "bench" => match args.pos(0).unwrap_or("step") {
+            "step" => {
+                let cfg = build_config(&args)?;
+                let iters = args.flag_parse::<u64>("iters")?.unwrap_or(50).max(1);
+                bench_step(&cfg, iters)?;
+            }
+            other => bail!("unknown bench target '{other}' — try `repro bench step`"),
+        },
+        "ckpt" => {
+            use qedps::trainer::checkpoint;
+            let cfg = build_config(&args)?;
+            let dir = cfg
+                .checkpoint_dir
+                .clone()
+                .context("ckpt needs --checkpoint-dir")?;
+            match args.pos(0).unwrap_or("list") {
+                "list" => {
+                    let iters = checkpoint::list_candidates(&dir);
+                    if iters.is_empty() {
+                        println!("no checkpoints under {dir}");
+                    }
+                    for iter in iters {
+                        let step_dir =
+                            std::path::Path::new(&dir).join(format!("state-{iter}"));
+                        match checkpoint::validate(&step_dir) {
+                            Ok(m) => println!(
+                                "state-{iter:<8} ok       model={} scheme={} prec w={} a={} g={}",
+                                m.model, m.scheme, m.prec.weights, m.prec.acts, m.prec.grads
+                            ),
+                            Err(e) => println!("state-{iter:<8} INVALID  {e:#}"),
+                        }
+                    }
+                }
+                "verify" => {
+                    let iters = checkpoint::list_candidates(&dir);
+                    let mut bad = 0usize;
+                    for iter in &iters {
+                        let step_dir =
+                            std::path::Path::new(&dir).join(format!("state-{iter}"));
+                        if let Err(e) = checkpoint::validate(&step_dir) {
+                            println!("state-{iter}: {e:#}");
+                            bad += 1;
+                        }
+                    }
+                    println!("{} checkpoints, {} invalid", iters.len(), bad);
+                    anyhow::ensure!(bad == 0, "{bad} checkpoints failed validation");
+                }
+                "prune" => {
+                    let n = checkpoint::gc(&dir, cfg.keep_checkpoints)?;
+                    println!(
+                        "pruned {n} checkpoints (keeping newest {})",
+                        cfg.keep_checkpoints
+                    );
+                }
+                other => bail!("unknown ckpt action '{other}' — try list|verify|prune"),
+            }
         }
         "gen-data" => {
             let out = args.flag("out").unwrap_or("data/synth");

@@ -96,7 +96,14 @@ pub struct RunSummary {
     pub iters: u64,
     /// Watchdog rollbacks performed during the run.
     pub recoveries: u64,
+    /// Watchdog trips observed (rollbacks plus a final abort, if any);
+    /// injected faults and resumes are informational and do not count.
+    pub watchdog_trips: u64,
 }
+
+/// Recovery-event kinds that mean the watchdog fired.
+const TRIP_KINDS: [&str; 4] =
+    ["non_finite_loss", "loss_explosion", "sustained_overflow", "abort"];
 
 impl History {
     pub fn new(scheme: &str, model: &str) -> Self {
@@ -143,6 +150,11 @@ impl History {
                 .recovery
                 .iter()
                 .filter(|e| e.rollback_to.is_some())
+                .count() as u64,
+            watchdog_trips: self
+                .recovery
+                .iter()
+                .filter(|e| TRIP_KINDS.contains(&e.kind.as_str()))
                 .count() as u64,
         }
     }
@@ -233,6 +245,7 @@ impl History {
             ("min_act_bits", Json::Num(s.min_act_bits as f64)),
             ("mean_step_ms", Json::Num(s.mean_step_ms)),
             ("recoveries", Json::Num(s.recoveries as f64)),
+            ("watchdog_trips", Json::Num(s.watchdog_trips as f64)),
             ("recovery_events", self.recovery_json()),
         ])
     }
@@ -335,8 +348,10 @@ mod tests {
         });
         let s = h.summary();
         assert_eq!(s.recoveries, 1, "only rollbacks count as recoveries");
+        assert_eq!(s.watchdog_trips, 1, "the injected fault is not a trip");
         let j = h.summary_json();
         assert_eq!(j.get("recoveries").as_f64(), Some(1.0));
+        assert_eq!(j.get("watchdog_trips").as_f64(), Some(1.0));
         let ev = j.get("recovery_events");
         assert_eq!(ev.at(0).get("kind").as_str(), Some("fault_loss"));
         assert!(ev.at(0).get("rollback_to").is_null());

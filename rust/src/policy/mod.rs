@@ -98,6 +98,16 @@ impl PrecState {
         ]
     }
 
+    /// Inverse of [`Self::to_vec`]: rebuild the triple from the artifact's
+    /// `prec` input layout (checkpoint state carries exactly this vector).
+    pub fn from_vec(v: &[f32; 6]) -> Self {
+        Self {
+            weights: Format::new(v[0] as i32, v[1] as i32),
+            acts: Format::new(v[2] as i32, v[3] as i32),
+            grads: Format::new(v[4] as i32, v[5] as i32),
+        }
+    }
+
     /// Mean word length across the three classes (reporting convenience).
     pub fn mean_bits(&self) -> f64 {
         (self.weights.bits() + self.acts.bits() + self.grads.bits()) as f64 / 3.0

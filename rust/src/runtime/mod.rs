@@ -9,14 +9,41 @@
 //! step exactly once and the hot loop is `execute` + host copies only.
 
 pub mod manifest;
+pub mod pinned;
 
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::rc::Rc;
 
 use anyhow::{Context, Result};
 use xla::{FromRawBytes, Literal, PjRtClient, PjRtLoadedExecutable};
 
 pub use manifest::{DType, Manifest, ModelMeta, ModuleSpec, TensorSpec};
+pub use pinned::{PinnedF32, PinnedI32};
+
+use crate::resilience::FaultInjector;
+
+thread_local! {
+    /// How many host literals this thread has constructed (see
+    /// [`literal_builds`]).
+    static LITERAL_BUILDS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Running count of `Literal` constructions on this thread.
+///
+/// Every literal built through [`literal_f32`]/[`literal_i32`] (and thus
+/// every [`PinnedF32`]/[`PinnedI32`] *creation*, but not refills) bumps the
+/// counter.  Tests and `repro bench step` snapshot it around the hot loop
+/// to prove `Trainer::step` performs zero per-iteration literal
+/// allocations for its batch/precision inputs.
+pub fn literal_builds() -> u64 {
+    LITERAL_BUILDS.with(|c| c.get())
+}
+
+fn count_literal_build() {
+    LITERAL_BUILDS.with(|c| c.set(c.get() + 1));
+}
 
 /// A compiled module plus its manifest spec.
 pub struct Executable {
@@ -67,6 +94,9 @@ pub struct Runtime {
     pub manifest: Manifest,
     pub dir: PathBuf,
     cache: HashMap<String, std::rc::Rc<Executable>>,
+    /// When armed, `read-fail` fault specs fire inside [`Runtime::load`] and
+    /// [`Runtime::load_params`] retry loops — not just the dataset load.
+    fault_injector: Option<Rc<RefCell<FaultInjector>>>,
 }
 
 impl Runtime {
@@ -97,7 +127,25 @@ impl Runtime {
             client.platform_name(),
             client.device_count()
         );
-        Ok(Runtime { client, manifest, dir, cache: HashMap::new() })
+        Ok(Runtime { client, manifest, dir, cache: HashMap::new(), fault_injector: None })
+    }
+
+    /// Route `read-fail` fault injection through this runtime's artifact and
+    /// parameter loads.  The injector is shared (the session also draws
+    /// loss/bitflip faults from it), hence the `Rc<RefCell<_>>`.
+    pub fn arm_faults(&mut self, injector: Rc<RefCell<FaultInjector>>) {
+        self.fault_injector = Some(injector);
+    }
+
+    pub fn disarm_faults(&mut self) {
+        self.fault_injector = None;
+    }
+
+    /// Draw an injected read failure for `what`, if one is armed and due.
+    fn injected_read_failure(&self, what: &str) -> Option<anyhow::Error> {
+        self.fault_injector
+            .as_ref()
+            .and_then(|inj| inj.borrow_mut().take_read_failure(what))
     }
 
     /// Load + compile a module (cached).
@@ -115,6 +163,9 @@ impl Runtime {
             3,
             100,
             |_| {
+                if let Some(e) = self.injected_read_failure(&format!("artifact {name}")) {
+                    return Err(e);
+                }
                 xla::HloModuleProto::from_text_file(&path)
                     .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))
             },
@@ -140,6 +191,9 @@ impl Runtime {
             3,
             100,
             |_| {
+                if let Some(e) = self.injected_read_failure(&format!("{model} params")) {
+                    return Err(e);
+                }
                 Literal::read_npz(&path, &())
                     .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))
             },
@@ -192,6 +246,7 @@ impl Runtime {
 pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
     let n: usize = shape.iter().product();
     anyhow::ensure!(data.len() == n, "literal: {} elems for shape {shape:?}", data.len());
+    count_literal_build();
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     if dims.is_empty() {
         return Ok(Literal::scalar(data[0]));
@@ -205,6 +260,7 @@ pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
 pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
     let n: usize = shape.iter().product();
     anyhow::ensure!(data.len() == n, "literal: {} elems for shape {shape:?}", data.len());
+    count_literal_build();
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     if dims.is_empty() {
         return Ok(Literal::scalar(data[0]));
@@ -233,5 +289,13 @@ mod tests {
         assert!(literal_f32(&[1.0], &[3]).is_err());
         let i = literal_i32(&[1, 2], &[2]).unwrap();
         assert_eq!(i.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn builder_calls_are_counted() {
+        let before = literal_builds();
+        literal_f32(&[1.0], &[]).unwrap();
+        literal_i32(&[1, 2, 3], &[3]).unwrap();
+        assert_eq!(literal_builds(), before + 2);
     }
 }

@@ -1,0 +1,147 @@
+//! Pre-pinned input literals: allocate once, refill in place every step.
+//!
+//! The PJRT execute path takes host [`Literal`]s by reference, so the only
+//! reason to construct a fresh `Literal` per iteration is convenience — and
+//! it shows up as allocator traffic and host-copy churn on the L3 hot path
+//! (ROADMAP "Perf").  A [`PinnedF32`]/[`PinnedI32`] owns one literal of a
+//! fixed shape and overwrites its payload via `copy_raw_from`, so the
+//! training step's batch/precision/scalar inputs are *zero-allocation*
+//! after [`crate::trainer::StepEngine`] construction.
+//!
+//! Creation goes through [`super::literal_f32`]/[`super::literal_i32`] and
+//! therefore counts against [`super::literal_builds`]; `fill` does not —
+//! that counter is how the `bench step` micro-benchmark and the integration
+//! tests prove the hot path stays allocation-free.
+
+use anyhow::Result;
+use xla::Literal;
+
+/// A fixed-shape f32 literal refilled in place (never reallocated).
+pub struct PinnedF32 {
+    lit: Literal,
+    len: usize,
+}
+
+impl PinnedF32 {
+    /// Allocate a zero-filled literal of `shape` (`&[]` pins a scalar).
+    pub fn zeros(shape: &[usize]) -> Result<PinnedF32> {
+        let len = shape.iter().product::<usize>().max(1);
+        let lit = super::literal_f32(&vec![0.0f32; len], shape)?;
+        Ok(PinnedF32 { lit, len })
+    }
+
+    /// Overwrite the payload; `data` must match the pinned element count.
+    pub fn fill(&mut self, data: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            data.len() == self.len,
+            "pinned fill: {} elems into a {}-elem literal",
+            data.len(),
+            self.len
+        );
+        self.lit
+            .copy_raw_from(data)
+            .map_err(|e| anyhow::anyhow!("refilling pinned literal: {e}"))
+    }
+
+    /// Overwrite a pinned scalar.
+    pub fn set_scalar(&mut self, v: f32) -> Result<()> {
+        self.fill(&[v])
+    }
+
+    pub fn literal(&self) -> &Literal {
+        &self.lit
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// A fixed-shape i32 literal refilled in place (never reallocated).
+pub struct PinnedI32 {
+    lit: Literal,
+    len: usize,
+}
+
+impl PinnedI32 {
+    pub fn zeros(shape: &[usize]) -> Result<PinnedI32> {
+        let len = shape.iter().product::<usize>().max(1);
+        let lit = super::literal_i32(&vec![0i32; len], shape)?;
+        Ok(PinnedI32 { lit, len })
+    }
+
+    pub fn fill(&mut self, data: &[i32]) -> Result<()> {
+        anyhow::ensure!(
+            data.len() == self.len,
+            "pinned fill: {} elems into a {}-elem literal",
+            data.len(),
+            self.len
+        );
+        self.lit
+            .copy_raw_from(data)
+            .map_err(|e| anyhow::anyhow!("refilling pinned literal: {e}"))
+    }
+
+    pub fn literal(&self) -> &Literal {
+        &self.lit
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{literal_builds, to_vec_f32};
+
+    #[test]
+    fn refill_changes_payload_not_identity() {
+        let mut p = PinnedF32::zeros(&[2, 2]).unwrap();
+        assert_eq!(to_vec_f32(p.literal()).unwrap(), vec![0.0; 4]);
+        p.fill(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(to_vec_f32(p.literal()).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        p.fill(&[5.0, 6.0, 7.0, 8.0]).unwrap();
+        assert_eq!(to_vec_f32(p.literal()).unwrap(), vec![5.0, 6.0, 7.0, 8.0]);
+        assert!(p.fill(&[1.0]).is_err(), "length mismatch must be rejected");
+    }
+
+    #[test]
+    fn scalar_pin_and_set() {
+        let mut p = PinnedF32::zeros(&[]).unwrap();
+        p.set_scalar(0.25).unwrap();
+        assert_eq!(p.literal().get_first_element::<f32>().unwrap(), 0.25);
+        p.set_scalar(-3.5).unwrap();
+        assert_eq!(p.literal().get_first_element::<f32>().unwrap(), -3.5);
+    }
+
+    #[test]
+    fn i32_refill() {
+        let mut p = PinnedI32::zeros(&[3]).unwrap();
+        p.fill(&[7, 8, 9]).unwrap();
+        assert_eq!(p.literal().to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn fill_does_not_count_as_literal_build() {
+        let mut p = PinnedF32::zeros(&[8]).unwrap();
+        let before = literal_builds();
+        for i in 0..100 {
+            p.fill(&[i as f32; 8]).unwrap();
+        }
+        assert_eq!(
+            literal_builds(),
+            before,
+            "refill must not construct literals"
+        );
+    }
+}

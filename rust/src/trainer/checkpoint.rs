@@ -31,7 +31,6 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 use xla::{FromRawBytes, Literal};
 
-use crate::fixedpoint::Format;
 use crate::policy::PrecState;
 use crate::util::json::Json;
 
@@ -171,14 +170,11 @@ pub fn save_state(
 
 fn prec_from_json(j: &Json) -> Result<PrecState> {
     let pv = j.get("prec");
-    let f = |i: usize| -> Result<i32> {
-        Ok(pv.at(i).as_f64().context("prec")? as i32)
-    };
-    Ok(PrecState {
-        weights: Format::new(f(0)?, f(1)?),
-        acts: Format::new(f(2)?, f(3)?),
-        grads: Format::new(f(4)?, f(5)?),
-    })
+    let mut v = [0.0f32; 6];
+    for (i, slot) in v.iter_mut().enumerate() {
+        *slot = pv.at(i).as_f64().context("prec")? as f32;
+    }
+    Ok(PrecState::from_vec(&v))
 }
 
 /// Validate one `state-<iter>/` directory: parse `state.json`, confirm all
@@ -231,6 +227,25 @@ pub fn list_candidates(dir: &str) -> Vec<u64> {
     };
     iters.sort_unstable_by(|a, b| b.cmp(a));
     iters
+}
+
+/// Keep-last-N garbage collection: delete all but the newest `keep`
+/// `state-<n>` dirs (by iteration number; staging `.tmp` dirs are not
+/// candidates and are left for the next save to reclaim).  `keep == 0`
+/// disables pruning.  Returns the number of checkpoints removed.
+pub fn gc(dir: &str, keep: u64) -> Result<usize> {
+    if keep == 0 {
+        return Ok(0);
+    }
+    let mut pruned = 0;
+    for iter in list_candidates(dir).into_iter().skip(keep as usize) {
+        let step_dir = Path::new(dir).join(format!("state-{iter}"));
+        std::fs::remove_dir_all(&step_dir)
+            .with_context(|| format!("pruning {step_dir:?}"))?;
+        crate::log_debug!("checkpoint: pruned {}", step_dir.display());
+        pruned += 1;
+    }
+    Ok(pruned)
 }
 
 /// The newest checkpoint under `dir` that passes [`validate`], skipping
@@ -289,6 +304,7 @@ pub fn load_latest(dir: &str, trainer: &mut Trainer) -> Result<u64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixedpoint::Format;
     use crate::runtime::literal_f32;
 
     fn fresh_dir(name: &str) -> PathBuf {
@@ -434,6 +450,32 @@ mod tests {
         map.remove("checksum");
         std::fs::write(&sj, Json::Obj(map).to_string_pretty()).unwrap();
         assert_eq!(validate(&dir.join("state-8")).unwrap().iter, 8);
+    }
+
+    #[test]
+    fn gc_keeps_newest_n_and_spares_staging_dirs() {
+        let dir = fresh_dir("qedps_ckpt_gc");
+        let dir_s = dir.to_string_lossy().into_owned();
+        let (params, mom) = (tensors(1.0), tensors(0.5));
+        for iter in [3u64, 7, 11, 15, 19] {
+            save_state(&dir_s, "mlp", "qedps", prec(), &params, &mom, iter).unwrap();
+        }
+        std::fs::create_dir_all(dir.join("state-21.tmp")).unwrap();
+
+        // keep == 0 disables pruning entirely
+        assert_eq!(gc(&dir_s, 0).unwrap(), 0);
+        assert_eq!(list_candidates(&dir_s), vec![19, 15, 11, 7, 3]);
+
+        assert_eq!(gc(&dir_s, 3).unwrap(), 2);
+        assert_eq!(list_candidates(&dir_s), vec![19, 15, 11]);
+        assert!(dir.join("state-21.tmp").exists(), "staging dir untouched");
+        // survivors still validate and resume still works
+        assert_eq!(latest_complete(&dir_s), Some(19));
+
+        // idempotent once within budget
+        assert_eq!(gc(&dir_s, 3).unwrap(), 0);
+        // a missing dir is not an error
+        assert_eq!(gc(&dir.join("nope").to_string_lossy(), 3).unwrap(), 0);
     }
 
     #[test]

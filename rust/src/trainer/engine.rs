@@ -1,0 +1,301 @@
+//! [`StepEngine`]: the compiled-executable hot path, and nothing else.
+//!
+//! The engine owns what one training run needs to *execute*: the train and
+//! eval [`Executable`]s, the live parameter/momentum literals, the host
+//! batch buffers, and — the point of this layer — a set of **pre-pinned
+//! input literals** ([`PinnedF32`]/[`PinnedI32`]) for batch x/y, the
+//! learning rate, the stochastic-rounding seed, and the `<IL,FL>` precision
+//! triple.  All of them are allocated once at construction and refilled in
+//! place each call, so [`StepEngine::step`] constructs **zero** literals
+//! per iteration (the precision literal is refilled only when the policy
+//! actually moves).  `repro bench step` and the integration tests verify
+//! this via [`crate::runtime::literal_builds`].
+//!
+//! Policy decisions, history, and recovery live above this layer (the
+//! [`super::Trainer`] facade and [`super::Session`]); the engine neither
+//! reads feedback nor chooses precision — it runs whatever triple it is
+//! handed and reports raw per-class `(E, R)` aggregates back.
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::config::ExperimentConfig;
+use crate::data::{batcher::EvalBatcher, Batcher, Dataset};
+use crate::policy::{AggMode, Class, PrecState, Rounding};
+use crate::resilience::FaultInjector;
+use crate::runtime::{literal_f32, Executable, PinnedF32, PinnedI32, Runtime};
+
+/// What one executed step reports: scalars plus per-class `(E, R)`
+/// aggregates, in `[weights, acts, grads]` order.
+#[derive(Debug, Clone, Copy)]
+pub struct RawStep {
+    pub loss: f32,
+    pub acc: f32,
+    pub e: [f32; 3],
+    pub r: [f32; 3],
+}
+
+/// Compiled executables + parameter state + pre-pinned input literals.
+pub struct StepEngine {
+    model: String,
+    agg: AggMode,
+    exe_train: std::rc::Rc<Executable>,
+    exe_eval: std::rc::Rc<Executable>,
+    params: Vec<Literal>,
+    mom: Vec<Literal>,
+    n_params: usize,
+    x_shape: Vec<usize>,
+    eval_x_shape: Vec<usize>,
+    // reusable host-side batch buffers
+    x_buf: Vec<f32>,
+    y_buf: Vec<i32>,
+    ex_buf: Vec<f32>,
+    ey_buf: Vec<i32>,
+    // pre-pinned device-input literals, refilled in place every call
+    x_in: PinnedF32,
+    y_in: PinnedI32,
+    lr_in: PinnedF32,
+    seed_in: PinnedF32,
+    prec_in: PinnedF32,
+    ex_in: PinnedF32,
+    ey_in: PinnedI32,
+    /// Last `<IL,FL>` six-vector written to `prec_in`; the literal is only
+    /// refilled when the policy moves.  NaN-seeded so the first sync always
+    /// writes.
+    prec_cache: [f32; 6],
+    /// Indices of each class's slots in the stat vectors.
+    site_idx: [Vec<usize>; 3],
+    evec_len: usize,
+}
+
+impl StepEngine {
+    /// Compile (cached) and pin everything for `cfg.model`.
+    ///
+    /// `rounding` and `quantized_eval` are resolved by the caller (the
+    /// policy owns those defaults; `force_rounding` overrides them).
+    pub fn new(
+        rt: &mut Runtime,
+        cfg: &ExperimentConfig,
+        rounding: Rounding,
+        quantized_eval: bool,
+    ) -> Result<StepEngine> {
+        let train_name = crate::runtime::Manifest::train_module_name(&cfg.model, rounding);
+        let eval_name = crate::runtime::Manifest::eval_module_name(&cfg.model, quantized_eval);
+        let exe_train = rt.load(&train_name)?;
+        let exe_eval = rt.load(&eval_name)?;
+        let params = rt.load_params(&cfg.model)?;
+        let mom = rt.zeros_like_params(&cfg.model)?;
+        let n_params = params.len();
+
+        let spec = &exe_train.spec;
+        let x_spec = &spec.inputs[spec.input_index("x")?];
+        let x_shape = x_spec.shape.clone();
+        let train_batch = x_shape[0];
+        let espec = &exe_eval.spec;
+        let eval_x_shape = espec.inputs[espec.input_index("x")?].shape.clone();
+        let eval_batch = eval_x_shape[0];
+
+        let site_idx = [
+            spec.site_indices(Class::Weight),
+            spec.site_indices(Class::Act),
+            spec.site_indices(Class::Grad),
+        ];
+        let evec_len = spec.outputs[spec.output_index("evec")?].elems();
+
+        Ok(StepEngine {
+            x_buf: vec![0.0; x_shape.iter().product()],
+            y_buf: vec![0; train_batch],
+            ex_buf: vec![0.0; eval_x_shape.iter().product()],
+            ey_buf: vec![0; eval_batch],
+            x_in: PinnedF32::zeros(&x_shape)?,
+            y_in: PinnedI32::zeros(&[train_batch])?,
+            lr_in: PinnedF32::zeros(&[])?,
+            seed_in: PinnedF32::zeros(&[])?,
+            prec_in: PinnedF32::zeros(&[6])?,
+            ex_in: PinnedF32::zeros(&eval_x_shape)?,
+            ey_in: PinnedI32::zeros(&[eval_batch])?,
+            prec_cache: [f32::NAN; 6],
+            model: cfg.model.clone(),
+            agg: cfg.agg,
+            exe_train,
+            exe_eval,
+            params,
+            mom,
+            n_params,
+            x_shape,
+            eval_x_shape,
+            site_idx,
+            evec_len,
+        })
+    }
+
+    pub fn train_batch_size(&self) -> usize {
+        self.x_shape[0]
+    }
+
+    pub fn eval_batch_size(&self) -> usize {
+        self.eval_x_shape[0]
+    }
+
+    /// Refill the shared precision literal iff the triple changed.
+    fn sync_prec(&mut self, prec: &PrecState) -> Result<()> {
+        let pv = prec.to_vec();
+        if pv != self.prec_cache {
+            self.prec_in.fill(&pv)?;
+            self.prec_cache = pv;
+        }
+        Ok(())
+    }
+
+    /// Aggregate a stat vector into a per-class value with the configured
+    /// aggregation mode.
+    fn collapse(&self, vec: &[f32], class: Class) -> f32 {
+        let idx = &self.site_idx[match class {
+            Class::Weight => 0,
+            Class::Act => 1,
+            Class::Grad => 2,
+        }];
+        let vals: Vec<f32> = idx.iter().map(|&i| vec[i]).collect();
+        self.agg.collapse(&vals)
+    }
+
+    /// Run one training iteration from the pre-filled batch buffers at the
+    /// given learning rate and precision.  Zero literal construction: every
+    /// input is a refilled pinned literal.
+    pub fn step(&mut self, iter: u64, lr: f32, prec: &PrecState) -> Result<RawStep> {
+        self.x_in.fill(&self.x_buf)?;
+        self.y_in.fill(&self.y_buf)?;
+        self.lr_in.set_scalar(lr)?;
+        self.seed_in.set_scalar((iter + 1) as f32)?;
+        self.sync_prec(prec)?;
+
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(2 * self.n_params + 5);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.mom.iter());
+        inputs.push(self.x_in.literal());
+        inputs.push(self.y_in.literal());
+        inputs.push(self.lr_in.literal());
+        inputs.push(self.seed_in.literal());
+        inputs.push(self.prec_in.literal());
+
+        let bufs = self
+            .exe_train
+            .run(&inputs)
+            .with_context(|| format!("train step {iter}"))?;
+        let mut outs = bufs.into_iter();
+        let new_params: Vec<Literal> = (&mut outs).take(self.n_params).collect();
+        let new_mom: Vec<Literal> = (&mut outs).take(self.n_params).collect();
+        let rest: Vec<Literal> = outs.collect();
+        anyhow::ensure!(rest.len() == 4, "train step output arity");
+        let loss = rest[0].get_first_element::<f32>()?;
+        let acc = rest[1].get_first_element::<f32>()?;
+        let evec = crate::runtime::to_vec_f32(&rest[2])?;
+        let rvec = crate::runtime::to_vec_f32(&rest[3])?;
+        anyhow::ensure!(evec.len() == self.evec_len, "evec length");
+
+        self.params = new_params;
+        self.mom = new_mom;
+
+        Ok(RawStep {
+            loss,
+            acc,
+            e: [
+                self.collapse(&evec, Class::Weight),
+                self.collapse(&evec, Class::Act),
+                self.collapse(&evec, Class::Grad),
+            ],
+            r: [
+                self.collapse(&rvec, Class::Weight),
+                self.collapse(&rvec, Class::Act),
+                self.collapse(&rvec, Class::Grad),
+            ],
+        })
+    }
+
+    /// Evaluate on a full dataset at the given precision; returns
+    /// (mean loss, accuracy).
+    pub fn evaluate(&mut self, test: &Dataset, prec: &PrecState) -> Result<(f32, f32)> {
+        let batch = self.eval_batch_size();
+        self.sync_prec(prec)?;
+        let mut eb = EvalBatcher::new(test, batch);
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut total = 0usize;
+        while let Some(valid) = eb.next_into(&mut self.ex_buf, &mut self.ey_buf) {
+            // keep shapes static; the generator sizes test sets to a
+            // multiple of the eval batch, so valid == batch in practice.
+            self.ex_in.fill(&self.ex_buf)?;
+            self.ey_in.fill(&self.ey_buf)?;
+            let mut inputs: Vec<&Literal> = Vec::with_capacity(self.n_params + 3);
+            inputs.extend(self.params.iter());
+            inputs.push(self.ex_in.literal());
+            inputs.push(self.ey_in.literal());
+            inputs.push(self.prec_in.literal());
+            let outs = self.exe_eval.run(&inputs)?;
+            let scale = valid as f64 / batch as f64;
+            loss_sum += outs[0].get_first_element::<f32>()? as f64 * scale;
+            correct += outs[1].get_first_element::<f32>()? as f64 * scale;
+            total += valid;
+        }
+        Ok((
+            (loss_sum / total.max(1) as f64) as f32,
+            (correct / total.max(1) as f64) as f32,
+        ))
+    }
+
+    /// Current parameters (for checkpointing / inspection).
+    pub fn params(&self) -> &[Literal] {
+        &self.params
+    }
+
+    pub fn mom(&self) -> &[Literal] {
+        &self.mom
+    }
+
+    /// Replace parameter/momentum state (checkpoint restore).
+    pub fn restore(&mut self, params: Vec<Literal>, mom: Vec<Literal>) {
+        assert_eq!(params.len(), self.n_params);
+        assert_eq!(mom.len(), self.n_params);
+        self.params = params;
+        self.mom = mom;
+    }
+
+    /// Reset parameters and momentum to iteration-0 state.
+    pub fn reinit(&mut self, rt: &mut Runtime) -> Result<()> {
+        self.params = rt.load_params(&self.model)?;
+        self.mom = rt.zeros_like_params(&self.model)?;
+        Ok(())
+    }
+
+    /// Flip one exponent bit in a stored tensor (fault injection):
+    /// `Weight` corrupts a parameter, `Grad` corrupts a momentum slot.
+    /// Returns a description of the corruption for the recovery log.
+    pub fn corrupt_value(&mut self, class: Class, inj: &mut FaultInjector) -> Result<String> {
+        let store = match class {
+            Class::Grad => &mut self.mom,
+            _ => &mut self.params,
+        };
+        let mut sizes = Vec::with_capacity(store.len());
+        let mut shapes = Vec::with_capacity(store.len());
+        for lit in store.iter() {
+            let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            sizes.push(dims.iter().product::<usize>());
+            shapes.push(dims);
+        }
+        let (t, i, bit) = inj.flip_site(store.len(), |k| sizes[k]);
+        let mut data = crate::runtime::to_vec_f32(&store[t])?;
+        let old = data[i];
+        data[i] = f32::from_bits(old.to_bits() ^ (1u32 << bit));
+        let new = data[i];
+        store[t] = literal_f32(&data, &shapes[t])?;
+        Ok(format!(
+            "flipped bit {bit} of {class:?} tensor {t} elem {i}: {old:e} -> {new:e}"
+        ))
+    }
+
+    /// Fill the training batch buffers from a batcher.
+    pub fn fill_batch(&mut self, b: &mut Batcher) {
+        b.next_into(&mut self.x_buf, &mut self.y_buf);
+    }
+}

@@ -1,63 +1,50 @@
-//! The training loop: the L3 hot path.
+//! Training: a layered engine/session architecture.
 //!
-//! Each iteration:
-//! 1. fill the batch buffers (no allocation),
-//! 2. execute the AOT train step with the *current* `<IL,FL>` triple as a
-//!    runtime input,
-//! 3. read back loss/acc + the per-site `(E, R)` stat vectors,
-//! 4. aggregate stats per attribute class and let the [`crate::policy`]
-//!    controller re-decide the precision for the next iteration,
-//! 5. record metrics; periodically evaluate on the test set and checkpoint.
+//! The monolithic trainer is split into three layers:
 //!
-//! Python is never involved: the step is a compiled PJRT executable.
+//! - [`StepEngine`] (`engine`): the L3 hot path.  Owns the compiled PJRT
+//!   executables, parameter/momentum literals, host batch buffers, and
+//!   **pre-pinned input literals** refilled in place each call — one
+//!   training step performs zero per-iteration `Literal` construction.
+//! - [`Trainer`] (this module): a thin facade for API stability.  Binds an
+//!   engine to a [`crate::policy`] controller: each `step` runs the engine
+//!   at the current `<IL,FL>` triple, folds the raw `(E, R)` aggregates
+//!   into a [`Feedback`], and lets the policy re-decide the precision for
+//!   the next iteration.
+//! - [`Session`] (`session`): one experiment's control loop — data, metric
+//!   recording, periodic eval, checkpointing with keep-last-N GC, and the
+//!   resilience driver (divergence watchdog, rollback with precision
+//!   escalation, bounded retries, fault injection; see
+//!   [`crate::resilience`]).
 //!
-//! ## Recovery (see [`crate::resilience`])
-//!
-//! [`run_experiment`] wraps the loop in a divergence watchdog.  When the
-//! watchdog trips — and the policy can escalate ([`Policy::can_escalate`];
-//! static baselines keep their divergence, it *is* the §5 experiment) —
-//! the driver rolls back to the newest complete checkpoint (or a fresh
-//! initialization when none exists), widens the precision through
-//! [`Policy::escalate`], rewinds the batch stream deterministically, and
-//! replays.  The retry budget is bounded; exhausting it writes a
-//! structured failure report and aborts.
+//! [`run_experiment`] is the stable entry point:
+//! `Session::new(rt, cfg)?.run(rt)`.
 
 pub mod checkpoint;
+pub mod engine;
+pub mod session;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use xla::Literal;
 
 use crate::config::ExperimentConfig;
-use crate::data::{batcher::EvalBatcher, Batcher, Dataset};
-use crate::metrics::{EvalRecord, History, RecoveryEvent, TrainRecord};
+use crate::data::{Batcher, Dataset};
+use crate::metrics::History;
 use crate::policy::{make_policy, Class, ClassStats, Feedback, Policy, PrecState};
-use crate::resilience::{
-    retry_with_backoff, FailureReport, FaultInjector, Watchdog, WatchdogConfig,
-};
-use crate::runtime::{literal_f32, literal_i32, Executable, Runtime};
-use crate::util::Stopwatch;
+use crate::resilience::FaultInjector;
+use crate::runtime::Runtime;
 
-/// Owns one training run.
+pub use engine::{RawStep, StepEngine};
+pub use session::Session;
+
+/// Owns one training run: a [`StepEngine`] plus the policy controller and
+/// its recorded history.
 pub struct Trainer {
     pub cfg: ExperimentConfig,
     pub policy: Box<dyn Policy>,
     pub prec: PrecState,
-    exe_train: std::rc::Rc<Executable>,
-    exe_eval: std::rc::Rc<Executable>,
-    params: Vec<Literal>,
-    mom: Vec<Literal>,
-    n_params: usize,
-    x_shape: Vec<usize>,
-    eval_x_shape: Vec<usize>,
-    // reusable host-side batch buffers
-    x_buf: Vec<f32>,
-    y_buf: Vec<i32>,
-    ex_buf: Vec<f32>,
-    ey_buf: Vec<i32>,
     pub history: History,
-    /// Indices of each class's slots in the stat vectors.
-    site_idx: [Vec<usize>; 3],
-    evec_len: usize,
+    engine: StepEngine,
 }
 
 impl Trainer {
@@ -69,179 +56,55 @@ impl Trainer {
             Some(other) => anyhow::bail!("force_rounding must be stochastic|nearest, got {other}"),
             None => policy.rounding(),
         };
-        let train_name =
-            crate::runtime::Manifest::train_module_name(&cfg.model, rounding);
-        let eval_name =
-            crate::runtime::Manifest::eval_module_name(&cfg.model, !policy.is_float());
-        let exe_train = rt.load(&train_name)?;
-        let exe_eval = rt.load(&eval_name)?;
-        let params = rt.load_params(&cfg.model)?;
-        let mom = rt.zeros_like_params(&cfg.model)?;
-        let n_params = params.len();
-
-        let spec = &exe_train.spec;
-        let x_spec = &spec.inputs[spec.input_index("x")?];
-        let x_shape = x_spec.shape.clone();
-        let train_batch = x_shape[0];
-        let espec = &exe_eval.spec;
-        let eval_x_shape = espec.inputs[espec.input_index("x")?].shape.clone();
-        let eval_batch = eval_x_shape[0];
-
-        let site_idx = [
-            spec.site_indices(Class::Weight),
-            spec.site_indices(Class::Act),
-            spec.site_indices(Class::Grad),
-        ];
-        let evec_len = spec.outputs[spec.output_index("evec")?].elems();
-
+        let engine = StepEngine::new(rt, &cfg, rounding, !policy.is_float())?;
         let prec = policy.init();
         let history = History::new(policy.name(), &cfg.model);
-        Ok(Trainer {
-            x_buf: vec![0.0; x_shape.iter().product()],
-            y_buf: vec![0; train_batch],
-            ex_buf: vec![0.0; eval_x_shape.iter().product()],
-            ey_buf: vec![0; eval_batch],
-            cfg,
-            policy,
-            prec,
-            exe_train,
-            exe_eval,
-            params,
-            mom,
-            n_params,
-            x_shape,
-            eval_x_shape,
-            history,
-            site_idx,
-            evec_len,
-        })
+        Ok(Trainer { cfg, policy, prec, history, engine })
     }
 
     pub fn train_batch_size(&self) -> usize {
-        self.x_shape[0]
+        self.engine.train_batch_size()
     }
 
     pub fn eval_batch_size(&self) -> usize {
-        self.eval_x_shape[0]
+        self.engine.eval_batch_size()
     }
 
-    /// Aggregate a stat vector into per-class values with the configured
-    /// aggregation mode.
-    fn collapse(&self, vec: &[f32], class: Class) -> f32 {
-        let idx = &self.site_idx[match class {
-            Class::Weight => 0,
-            Class::Act => 1,
-            Class::Grad => 2,
-        }];
-        let vals: Vec<f32> = idx.iter().map(|&i| vec[i]).collect();
-        self.cfg.agg.collapse(&vals)
-    }
-
-    /// Run one training iteration from pre-filled batch buffers.
+    /// Run one training iteration from pre-filled batch buffers: execute at
+    /// the current precision, then let the policy move it for the next
+    /// iteration.
     pub fn step(&mut self, iter: u64) -> Result<StepOutput> {
         let lr = self.cfg.lr_at(iter) as f32;
-        let seed = (iter + 1) as f32;
-        let prec_vec = self.prec.to_vec();
-
-        let x = literal_f32(&self.x_buf, &self.x_shape)?;
-        let y = literal_i32(&self.y_buf, &[self.y_buf.len()])?;
-        let lr_l = Literal::scalar(lr);
-        let seed_l = Literal::scalar(seed);
-        let prec_l = literal_f32(&prec_vec, &[6])?;
-
-        let mut inputs: Vec<&Literal> =
-            Vec::with_capacity(2 * self.n_params + 5);
-        inputs.extend(self.params.iter());
-        inputs.extend(self.mom.iter());
-        inputs.push(&x);
-        inputs.push(&y);
-        inputs.push(&lr_l);
-        inputs.push(&seed_l);
-        inputs.push(&prec_l);
-
-        let bufs = self
-            .exe_train
-            .run(&inputs)
-            .with_context(|| format!("train step {iter}"))?;
-        let mut outs = bufs.into_iter();
-        let new_params: Vec<Literal> = (&mut outs).take(self.n_params).collect();
-        let new_mom: Vec<Literal> = (&mut outs).take(self.n_params).collect();
-        let rest: Vec<Literal> = outs.collect();
-        anyhow::ensure!(rest.len() == 4, "train step output arity");
-        let loss = rest[0].get_first_element::<f32>()?;
-        let acc = rest[1].get_first_element::<f32>()?;
-        let evec = crate::runtime::to_vec_f32(&rest[2])?;
-        let rvec = crate::runtime::to_vec_f32(&rest[3])?;
-        anyhow::ensure!(evec.len() == self.evec_len, "evec length");
-
-        self.params = new_params;
-        self.mom = new_mom;
-
+        let prec_used = self.prec;
+        let raw = self.engine.step(iter, lr, &prec_used)?;
         let fb = Feedback {
             iter,
-            loss,
-            weights: ClassStats {
-                e: self.collapse(&evec, Class::Weight),
-                r: self.collapse(&rvec, Class::Weight),
-            },
-            acts: ClassStats {
-                e: self.collapse(&evec, Class::Act),
-                r: self.collapse(&rvec, Class::Act),
-            },
-            grads: ClassStats {
-                e: self.collapse(&evec, Class::Grad),
-                r: self.collapse(&rvec, Class::Grad),
-            },
+            loss: raw.loss,
+            weights: ClassStats { e: raw.e[0], r: raw.r[0] },
+            acts: ClassStats { e: raw.e[1], r: raw.r[1] },
+            grads: ClassStats { e: raw.e[2], r: raw.r[2] },
         };
-        let prec_used = self.prec;
         self.prec = self.policy.update(self.prec, &fb);
-        Ok(StepOutput { loss, acc, fb, prec_used })
+        Ok(StepOutput { loss: raw.loss, acc: raw.acc, fb, prec_used })
     }
 
     /// Evaluate on a full dataset; returns (mean loss, accuracy).
     pub fn evaluate(&mut self, test: &Dataset) -> Result<(f32, f32)> {
-        let batch = self.eval_batch_size();
-        let mut eb = EvalBatcher::new(test, batch);
-        let prec_l = literal_f32(&self.prec.to_vec(), &[6])?;
-        let mut loss_sum = 0.0f64;
-        let mut correct = 0.0f64;
-        let mut total = 0usize;
-        while let Some(valid) = eb.next_into(&mut self.ex_buf, &mut self.ey_buf) {
-            // keep shapes static; the generator sizes test sets to a
-            // multiple of the eval batch, so valid == batch in practice.
-            let x = literal_f32(&self.ex_buf, &self.eval_x_shape)?;
-            let y = literal_i32(&self.ey_buf, &[batch])?;
-            let mut inputs: Vec<&Literal> = Vec::with_capacity(self.n_params + 3);
-            inputs.extend(self.params.iter());
-            inputs.push(&x);
-            inputs.push(&y);
-            inputs.push(&prec_l);
-            let outs = self.exe_eval.run(&inputs)?;
-            let scale = valid as f64 / batch as f64;
-            loss_sum += outs[0].get_first_element::<f32>()? as f64 * scale;
-            correct += outs[1].get_first_element::<f32>()? as f64 * scale;
-            total += valid;
-        }
-        Ok((
-            (loss_sum / total.max(1) as f64) as f32,
-            (correct / total.max(1) as f64) as f32,
-        ))
+        let prec = self.prec;
+        self.engine.evaluate(test, &prec)
     }
 
     /// Current parameters (for checkpointing / inspection).
     pub fn params(&self) -> &[Literal] {
-        &self.params
+        self.engine.params()
     }
 
     pub fn mom(&self) -> &[Literal] {
-        &self.mom
+        self.engine.mom()
     }
 
     pub fn restore(&mut self, params: Vec<Literal>, mom: Vec<Literal>, prec: PrecState) {
-        assert_eq!(params.len(), self.n_params);
-        assert_eq!(mom.len(), self.n_params);
-        self.params = params;
-        self.mom = mom;
+        self.engine.restore(params, mom);
         self.prec = prec;
     }
 
@@ -249,8 +112,7 @@ impl Trainer {
     /// exists yet): fresh parameters, zero momentum, the policy's initial
     /// precision.
     pub fn reinit(&mut self, rt: &mut Runtime) -> Result<()> {
-        self.params = rt.load_params(&self.cfg.model)?;
-        self.mom = rt.zeros_like_params(&self.cfg.model)?;
+        self.engine.reinit(rt)?;
         self.prec = self.policy.init();
         Ok(())
     }
@@ -258,37 +120,13 @@ impl Trainer {
     /// Flip one exponent bit in a stored tensor (fault injection):
     /// `Weight` corrupts a parameter, `Grad` corrupts a momentum slot.
     /// Returns a description of the corruption for the recovery log.
-    pub fn corrupt_value(
-        &mut self,
-        class: Class,
-        inj: &mut FaultInjector,
-    ) -> Result<String> {
-        let store = match class {
-            Class::Grad => &mut self.mom,
-            _ => &mut self.params,
-        };
-        let mut sizes = Vec::with_capacity(store.len());
-        let mut shapes = Vec::with_capacity(store.len());
-        for lit in store.iter() {
-            let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e}"))?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            sizes.push(dims.iter().product::<usize>());
-            shapes.push(dims);
-        }
-        let (t, i, bit) = inj.flip_site(store.len(), |k| sizes[k]);
-        let mut data = crate::runtime::to_vec_f32(&store[t])?;
-        let old = data[i];
-        data[i] = f32::from_bits(old.to_bits() ^ (1u32 << bit));
-        let new = data[i];
-        store[t] = literal_f32(&data, &shapes[t])?;
-        Ok(format!(
-            "flipped bit {bit} of {class:?} tensor {t} elem {i}: {old:e} -> {new:e}"
-        ))
+    pub fn corrupt_value(&mut self, class: Class, inj: &mut FaultInjector) -> Result<String> {
+        self.engine.corrupt_value(class, inj)
     }
 
     /// Fill the training batch buffers from a batcher.
     pub fn fill_batch(&mut self, b: &mut Batcher) {
-        b.next_into(&mut self.x_buf, &mut self.y_buf);
+        self.engine.fill_batch(b);
     }
 }
 
@@ -302,240 +140,9 @@ pub struct StepOutput {
     pub prec_used: PrecState,
 }
 
-/// Advance a fresh batch stream past `n` consumed batches — deterministic
-/// replay after a resume or rollback (each iteration consumes exactly one
-/// batch, so the stream position equals the iteration number).
-fn skip_batches(trainer: &mut Trainer, batcher: &mut Batcher, n: u64) {
-    for _ in 0..n {
-        trainer.fill_batch(batcher);
-    }
-}
-
 /// Drive a full experiment: data, loop, eval, metrics, checkpoints —
 /// wrapped in the resilience harness (divergence watchdog, rollback with
 /// precision escalation, bounded retries, fault injection).
 pub fn run_experiment(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<History> {
-    let mut cfg = cfg.clone();
-    let eval_batch = rt.manifest.eval_batch;
-    // size the synthetic test set to a multiple of the eval batch
-    cfg.test_n = cfg.test_n.div_ceil(eval_batch) * eval_batch;
-
-    let mut injector = FaultInjector::from_specs(&cfg.faults, cfg.fault_seed)?;
-    if !injector.is_empty() {
-        crate::log_warn!(
-            "fault injection armed: {:?} (seed {})",
-            cfg.faults,
-            cfg.fault_seed
-        );
-    }
-
-    let (train, test, source) = retry_with_backoff("dataset load", 3, 50, |_| {
-        if let Some(e) = injector.take_read_failure("dataset") {
-            return Err(e);
-        }
-        Ok(crate::data::load_default(cfg.train_n, cfg.test_n))
-    })?;
-    crate::log_info!(
-        "experiment: scheme={} model={} iters={} data={:?} (train={}, test={})",
-        cfg.scheme, cfg.model, cfg.iters, source, train.n, test.n
-    );
-    let mut trainer = Trainer::new(rt, cfg.clone())?;
-    let mut batcher = Batcher::new(&train, trainer.train_batch_size(), cfg.seed);
-    let ckpt_dir = cfg.checkpoint_dir.clone();
-
-    let mut iter: u64 = 0;
-    if cfg.resume {
-        let dir = ckpt_dir
-            .as_deref()
-            .context("resume=true requires a checkpoint dir")?;
-        match checkpoint::load_latest(dir, &mut trainer) {
-            Ok(next) => {
-                crate::log_info!("resume: continuing from iter {next}");
-                trainer.history.recovery.push(RecoveryEvent {
-                    iter: next,
-                    kind: "resume".into(),
-                    detail: format!("resumed from checkpoint at iter {}", next - 1),
-                    rollback_to: None,
-                });
-                skip_batches(&mut trainer, &mut batcher, next);
-                iter = next;
-            }
-            Err(e) => {
-                crate::log_warn!("resume: no usable checkpoint ({e:#}); starting fresh")
-            }
-        }
-    }
-
-    // The watchdog only arms for policies that can respond (static
-    // baselines must keep their divergence — it *is* the §5 experiment).
-    let armed = cfg.watchdog && trainer.policy.can_escalate();
-    let mut watchdog = Watchdog::new(WatchdogConfig {
-        loss_ratio: cfg.loss_explode_ratio as f32,
-        warmup: cfg.watchdog_warmup,
-        r_trip: cfg.overflow_trip as f32,
-        r_window: cfg.overflow_window,
-    });
-    let mut retries: u64 = 0;
-
-    while iter < cfg.iters {
-        if let Some(class) = injector.bitflip(iter) {
-            let detail = trainer.corrupt_value(class, &mut injector)?;
-            crate::log_warn!("iter {iter}: fault injected: {detail}");
-            trainer.history.recovery.push(RecoveryEvent {
-                iter,
-                kind: "fault_bitflip".into(),
-                detail,
-                rollback_to: None,
-            });
-        }
-
-        trainer.fill_batch(&mut batcher);
-        let t = Stopwatch::start();
-        let mut out = trainer.step(iter)?;
-        let step_ms = t.elapsed_ms();
-        if let Some(forced) = injector.loss_override(iter) {
-            crate::log_warn!("iter {iter}: fault injected: loss forced to {forced}");
-            trainer.history.recovery.push(RecoveryEvent {
-                iter,
-                kind: "fault_loss".into(),
-                detail: format!("loss forced to {forced}"),
-                rollback_to: None,
-            });
-            out.loss = forced;
-            out.fb.loss = forced;
-        }
-
-        let last = iter + 1 == cfg.iters;
-        if cfg.log_every > 0 && (iter % cfg.log_every == 0 || last) {
-            trainer.history.train.push(TrainRecord {
-                iter,
-                loss: out.loss,
-                acc: out.acc,
-                lr: cfg.lr_at(iter),
-                prec: out.prec_used,
-                e: [out.fb.weights.e, out.fb.acts.e, out.fb.grads.e],
-                r: [out.fb.weights.r, out.fb.acts.r, out.fb.grads.r],
-                step_ms,
-            });
-            crate::log_debug!(
-                "iter {iter}: loss={:.4} acc={:.3} w={} a={} g={} ({step_ms:.1}ms)",
-                out.loss, out.acc, out.prec_used.weights, out.prec_used.acts,
-                out.prec_used.grads
-            );
-        }
-
-        // Watchdog runs before eval/checkpoint so a poisoned state is
-        // neither evaluated nor persisted as a rollback target.
-        if armed {
-            if let Some(trip) = watchdog.observe(&out.fb) {
-                retries += 1;
-                crate::log_warn!(
-                    "iter {iter}: watchdog tripped: {trip} (recovery {retries}/{})",
-                    cfg.max_recoveries
-                );
-                if retries > cfg.max_recoveries {
-                    trainer.history.recovery.push(RecoveryEvent {
-                        iter,
-                        kind: "abort".into(),
-                        detail: trip.to_string(),
-                        rollback_to: None,
-                    });
-                    let report = FailureReport {
-                        scheme: cfg.scheme.clone(),
-                        model: cfg.model.clone(),
-                        iter,
-                        attempts: retries - 1,
-                        reason: trip.to_string(),
-                    };
-                    let path = report.write(&cfg.out_dir, &trainer.history)?;
-                    anyhow::bail!(
-                        "run aborted after {} recovery attempts ({trip}); \
-                         report: {}",
-                        retries - 1,
-                        path.display()
-                    );
-                }
-                // Roll back: newest complete checkpoint, else a fresh
-                // initialization; then escalate precision and replay.
-                let restored = match ckpt_dir.as_deref() {
-                    Some(d) => match checkpoint::load_latest(d, &mut trainer) {
-                        Ok(next) => Some(next),
-                        Err(e) => {
-                            crate::log_warn!(
-                                "rollback: {e:#}; restarting from initialization"
-                            );
-                            None
-                        }
-                    },
-                    None => None,
-                };
-                let resume_iter = match restored {
-                    Some(next) => next,
-                    None => {
-                        trainer.reinit(rt)?;
-                        0
-                    }
-                };
-                trainer.prec = trainer.policy.escalate(trainer.prec, trip.class());
-                crate::log_info!(
-                    "iter {iter}: rolled back to iter {resume_iter}; escalated \
-                     to w={} a={} g={}",
-                    trainer.prec.weights,
-                    trainer.prec.acts,
-                    trainer.prec.grads
-                );
-                trainer.history.recovery.push(RecoveryEvent {
-                    iter,
-                    kind: trip.kind().into(),
-                    detail: trip.to_string(),
-                    rollback_to: Some(resume_iter),
-                });
-                // records past the rollback point describe undone work
-                trainer.history.train.retain(|r| r.iter < resume_iter);
-                trainer.history.eval.retain(|r| r.iter < resume_iter);
-                batcher = Batcher::new(&train, trainer.train_batch_size(), cfg.seed);
-                skip_batches(&mut trainer, &mut batcher, resume_iter);
-                let backoff = cfg
-                    .recovery_backoff
-                    .saturating_mul(1u64 << (retries - 1).min(16));
-                watchdog.hold_until(resume_iter + backoff);
-                watchdog.reset_baseline();
-                iter = resume_iter;
-                continue;
-            }
-        } else if !out.loss.is_finite() {
-            // static-format divergence (the §5 demonstration): record and
-            // keep going — the figure needs the whole (diverged) curve
-            crate::log_warn!(
-                "iter {iter}: loss is not finite ({} divergence)",
-                trainer.policy.name()
-            );
-        }
-
-        if (cfg.eval_every > 0 && iter % cfg.eval_every == 0 && iter > 0) || last {
-            let (tl, ta) = trainer.evaluate(&test)?;
-            trainer.history.eval.push(EvalRecord {
-                iter,
-                test_loss: tl,
-                test_acc: ta,
-            });
-            crate::log_info!(
-                "iter {iter}: test_acc={ta:.4} test_loss={tl:.4} \
-                 bits(w/a/g)={}/{}/{}",
-                out.prec_used.weights.bits(),
-                out.prec_used.acts.bits(),
-                out.prec_used.grads.bits()
-            );
-        }
-        if let Some(dir) = &ckpt_dir {
-            if cfg.checkpoint_every > 0
-                && iter > 0
-                && (iter % cfg.checkpoint_every == 0 || last)
-            {
-                checkpoint::save(dir, &trainer, iter)?;
-            }
-        }
-        iter += 1;
-    }
-    Ok(trainer.history)
+    Session::new(rt, cfg)?.run(rt)
 }

@@ -1,0 +1,304 @@
+//! [`Session`]: one experiment's control loop — policy-driven training with
+//! the resilience harness wrapped around the [`super::Trainer`] facade.
+//!
+//! The session owns everything *around* the hot path: the datasets, the
+//! fault injector (shared with the [`Runtime`] so `read-fail` specs also
+//! fire inside artifact/param loads), the divergence watchdog, the
+//! rollback-with-escalation driver, metric recording, periodic eval, and
+//! crash-safe checkpoints with keep-last-N garbage collection.  The actual
+//! per-iteration execution is delegated to the trainer (and through it the
+//! [`super::StepEngine`]), which keeps this module free of PJRT details.
+//!
+//! [`super::run_experiment`] is now a two-liner:
+//! `Session::new(rt, cfg)?.run(rt)`.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::{Batcher, Dataset};
+use crate::metrics::{EvalRecord, History, RecoveryEvent, TrainRecord};
+use crate::resilience::{
+    retry_with_backoff, FailureReport, FaultInjector, Watchdog, WatchdogConfig,
+};
+use crate::runtime::Runtime;
+use crate::util::Stopwatch;
+
+use super::{checkpoint, Trainer};
+
+/// One experiment: config + data + trainer + recovery state.
+pub struct Session {
+    cfg: ExperimentConfig,
+    trainer: Trainer,
+    train: Dataset,
+    test: Dataset,
+    injector: Rc<RefCell<FaultInjector>>,
+}
+
+impl Session {
+    /// Load data and build the trainer, with fault injection armed *before*
+    /// any artifact/param read so `read-fail` specs cover those loads too.
+    pub fn new(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<Session> {
+        let mut cfg = cfg.clone();
+        let eval_batch = rt.manifest.eval_batch;
+        // size the synthetic test set to a multiple of the eval batch
+        cfg.test_n = cfg.test_n.div_ceil(eval_batch) * eval_batch;
+
+        let injector = Rc::new(RefCell::new(FaultInjector::from_specs(
+            &cfg.faults,
+            cfg.fault_seed,
+        )?));
+        if injector.borrow().is_empty() {
+            // a previous session on this runtime may have left faults armed
+            rt.disarm_faults();
+        } else {
+            crate::log_warn!(
+                "fault injection armed: {:?} (seed {})",
+                cfg.faults,
+                cfg.fault_seed
+            );
+            rt.arm_faults(injector.clone());
+        }
+
+        let (train, test, source) = retry_with_backoff("dataset load", 3, 50, |_| {
+            if let Some(e) = injector.borrow_mut().take_read_failure("dataset") {
+                return Err(e);
+            }
+            Ok(crate::data::load_default(cfg.train_n, cfg.test_n))
+        })?;
+        crate::log_info!(
+            "experiment: scheme={} model={} iters={} data={:?} (train={}, test={})",
+            cfg.scheme, cfg.model, cfg.iters, source, train.n, test.n
+        );
+        let trainer = Trainer::new(rt, cfg.clone())?;
+        Ok(Session { cfg, trainer, train, test, injector })
+    }
+
+    /// Drive the full run: loop, eval, metrics, checkpoints — wrapped in
+    /// the divergence watchdog with rollback, precision escalation, bounded
+    /// retries, and deterministic batch-stream replay.
+    pub fn run(self, rt: &mut Runtime) -> Result<History> {
+        let Session { cfg, mut trainer, train, test, injector } = self;
+        let mut batcher = Batcher::new(&train, trainer.train_batch_size(), cfg.seed);
+        let ckpt_dir = cfg.checkpoint_dir.clone();
+
+        let mut iter: u64 = 0;
+        if cfg.resume {
+            let dir = ckpt_dir
+                .as_deref()
+                .context("resume=true requires a checkpoint dir")?;
+            match checkpoint::load_latest(dir, &mut trainer) {
+                Ok(next) => {
+                    crate::log_info!("resume: continuing from iter {next}");
+                    trainer.history.recovery.push(RecoveryEvent {
+                        iter: next,
+                        kind: "resume".into(),
+                        detail: format!("resumed from checkpoint at iter {}", next - 1),
+                        rollback_to: None,
+                    });
+                    skip_batches(&mut trainer, &mut batcher, next);
+                    iter = next;
+                }
+                Err(e) => {
+                    crate::log_warn!("resume: no usable checkpoint ({e:#}); starting fresh")
+                }
+            }
+        }
+
+        // The watchdog only arms for policies that can respond (static
+        // baselines must keep their divergence — it *is* the §5 experiment).
+        let armed = cfg.watchdog && trainer.policy.can_escalate();
+        let mut watchdog = Watchdog::new(WatchdogConfig {
+            loss_ratio: cfg.loss_explode_ratio as f32,
+            warmup: cfg.watchdog_warmup,
+            r_trip: cfg.overflow_trip as f32,
+            r_window: cfg.overflow_window,
+        });
+        let mut retries: u64 = 0;
+
+        while iter < cfg.iters {
+            {
+                let mut inj = injector.borrow_mut();
+                if let Some(class) = inj.bitflip(iter) {
+                    let detail = trainer.corrupt_value(class, &mut inj)?;
+                    crate::log_warn!("iter {iter}: fault injected: {detail}");
+                    trainer.history.recovery.push(RecoveryEvent {
+                        iter,
+                        kind: "fault_bitflip".into(),
+                        detail,
+                        rollback_to: None,
+                    });
+                }
+            }
+
+            trainer.fill_batch(&mut batcher);
+            let t = Stopwatch::start();
+            let mut out = trainer.step(iter)?;
+            let step_ms = t.elapsed_ms();
+            if let Some(forced) = injector.borrow_mut().loss_override(iter) {
+                crate::log_warn!("iter {iter}: fault injected: loss forced to {forced}");
+                trainer.history.recovery.push(RecoveryEvent {
+                    iter,
+                    kind: "fault_loss".into(),
+                    detail: format!("loss forced to {forced}"),
+                    rollback_to: None,
+                });
+                out.loss = forced;
+                out.fb.loss = forced;
+            }
+
+            let last = iter + 1 == cfg.iters;
+            if cfg.log_every > 0 && (iter % cfg.log_every == 0 || last) {
+                trainer.history.train.push(TrainRecord {
+                    iter,
+                    loss: out.loss,
+                    acc: out.acc,
+                    lr: cfg.lr_at(iter),
+                    prec: out.prec_used,
+                    e: [out.fb.weights.e, out.fb.acts.e, out.fb.grads.e],
+                    r: [out.fb.weights.r, out.fb.acts.r, out.fb.grads.r],
+                    step_ms,
+                });
+                crate::log_debug!(
+                    "iter {iter}: loss={:.4} acc={:.3} w={} a={} g={} ({step_ms:.1}ms)",
+                    out.loss, out.acc, out.prec_used.weights, out.prec_used.acts,
+                    out.prec_used.grads
+                );
+            }
+
+            // Watchdog runs before eval/checkpoint so a poisoned state is
+            // neither evaluated nor persisted as a rollback target.
+            if armed {
+                if let Some(trip) = watchdog.observe(&out.fb) {
+                    retries += 1;
+                    crate::log_warn!(
+                        "iter {iter}: watchdog tripped: {trip} (recovery {retries}/{})",
+                        cfg.max_recoveries
+                    );
+                    if retries > cfg.max_recoveries {
+                        trainer.history.recovery.push(RecoveryEvent {
+                            iter,
+                            kind: "abort".into(),
+                            detail: trip.to_string(),
+                            rollback_to: None,
+                        });
+                        let report = FailureReport {
+                            scheme: cfg.scheme.clone(),
+                            model: cfg.model.clone(),
+                            iter,
+                            attempts: retries - 1,
+                            reason: trip.to_string(),
+                        };
+                        let path = report.write(&cfg.out_dir, &trainer.history)?;
+                        anyhow::bail!(
+                            "run aborted after {} recovery attempts ({trip}); \
+                             report: {}",
+                            retries - 1,
+                            path.display()
+                        );
+                    }
+                    // Roll back: newest complete checkpoint, else a fresh
+                    // initialization; then escalate precision and replay.
+                    let restored = match ckpt_dir.as_deref() {
+                        Some(d) => match checkpoint::load_latest(d, &mut trainer) {
+                            Ok(next) => Some(next),
+                            Err(e) => {
+                                crate::log_warn!(
+                                    "rollback: {e:#}; restarting from initialization"
+                                );
+                                None
+                            }
+                        },
+                        None => None,
+                    };
+                    let resume_iter = match restored {
+                        Some(next) => next,
+                        None => {
+                            trainer.reinit(rt)?;
+                            0
+                        }
+                    };
+                    trainer.prec = trainer.policy.escalate(trainer.prec, trip.class());
+                    crate::log_info!(
+                        "iter {iter}: rolled back to iter {resume_iter}; escalated \
+                         to w={} a={} g={}",
+                        trainer.prec.weights,
+                        trainer.prec.acts,
+                        trainer.prec.grads
+                    );
+                    trainer.history.recovery.push(RecoveryEvent {
+                        iter,
+                        kind: trip.kind().into(),
+                        detail: trip.to_string(),
+                        rollback_to: Some(resume_iter),
+                    });
+                    // records past the rollback point describe undone work
+                    trainer.history.train.retain(|r| r.iter < resume_iter);
+                    trainer.history.eval.retain(|r| r.iter < resume_iter);
+                    batcher = Batcher::new(&train, trainer.train_batch_size(), cfg.seed);
+                    skip_batches(&mut trainer, &mut batcher, resume_iter);
+                    let backoff = cfg
+                        .recovery_backoff
+                        .saturating_mul(1u64 << (retries - 1).min(16));
+                    watchdog.hold_until(resume_iter + backoff);
+                    watchdog.reset_baseline();
+                    iter = resume_iter;
+                    continue;
+                }
+            } else if !out.loss.is_finite() {
+                // static-format divergence (the §5 demonstration): record and
+                // keep going — the figure needs the whole (diverged) curve
+                crate::log_warn!(
+                    "iter {iter}: loss is not finite ({} divergence)",
+                    trainer.policy.name()
+                );
+            }
+
+            if (cfg.eval_every > 0 && iter % cfg.eval_every == 0 && iter > 0) || last {
+                let (tl, ta) = trainer.evaluate(&test)?;
+                trainer.history.eval.push(EvalRecord {
+                    iter,
+                    test_loss: tl,
+                    test_acc: ta,
+                });
+                crate::log_info!(
+                    "iter {iter}: test_acc={ta:.4} test_loss={tl:.4} \
+                     bits(w/a/g)={}/{}/{}",
+                    out.prec_used.weights.bits(),
+                    out.prec_used.acts.bits(),
+                    out.prec_used.grads.bits()
+                );
+            }
+            if let Some(dir) = &ckpt_dir {
+                if cfg.checkpoint_every > 0
+                    && iter > 0
+                    && (iter % cfg.checkpoint_every == 0 || last)
+                {
+                    checkpoint::save(dir, &trainer, iter)?;
+                    // GC never fails a healthy run — a prune error is noise
+                    // compared to losing the training job.
+                    match checkpoint::gc(dir, cfg.keep_checkpoints) {
+                        Ok(n) if n > 0 => {
+                            crate::log_debug!("checkpoint gc: pruned {n} old state dirs")
+                        }
+                        Ok(_) => {}
+                        Err(e) => crate::log_warn!("checkpoint gc failed: {e:#}"),
+                    }
+                }
+            }
+            iter += 1;
+        }
+        Ok(trainer.history)
+    }
+}
+
+/// Advance a fresh batch stream past `n` consumed batches — deterministic
+/// replay after a resume or rollback (each iteration consumes exactly one
+/// batch, so the stream position equals the iteration number).
+fn skip_batches(trainer: &mut Trainer, batcher: &mut Batcher, n: u64) {
+    for _ in 0..n {
+        trainer.fill_batch(batcher);
+    }
+}

@@ -223,3 +223,38 @@ fn transient_read_failure_is_retried() {
     let hist = run_experiment(&mut rt, &cfg).unwrap();
     assert_eq!(hist.summary().status.as_str(), "ok");
 }
+
+/// `read-fail` guards more than the dataset read: artifact compilation and
+/// parameter loads consult the same injector.  Armed directly on the
+/// runtime so the failures land on `Runtime::load` / `load_params` instead
+/// of being absorbed by the session's dataset retry (which always runs
+/// first and would drain the budget).
+#[test]
+fn read_failures_cover_artifact_and_param_loads() {
+    use qedps::resilience::FaultInjector;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn armed_budget(rt: &mut Runtime, n: u32) -> Rc<RefCell<FaultInjector>> {
+        let inj = Rc::new(RefCell::new(
+            FaultInjector::from_specs(&[format!("read-fail:{n}")], 1).unwrap(),
+        ));
+        rt.arm_faults(inj.clone());
+        inj
+    }
+
+    // two injected failures hit the first guarded artifact read; the
+    // 3-attempt retry absorbs both and compilation still succeeds
+    let mut rt = Runtime::create().unwrap();
+    let inj = armed_budget(&mut rt, 2);
+    let cfg = quick_cfg("qedps", "artload_out");
+    Trainer::new(&mut rt, cfg).unwrap();
+    assert!(inj.borrow().is_empty(), "artifact load must drain the budget");
+
+    // params specifically: re-arm and call the guarded load directly
+    let inj = armed_budget(&mut rt, 2);
+    let params = rt.load_params("mlp").unwrap();
+    assert!(!params.is_empty());
+    assert!(inj.borrow().is_empty(), "load_params must drain the budget");
+    rt.disarm_faults();
+}

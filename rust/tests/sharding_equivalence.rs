@@ -1,0 +1,119 @@
+//! Determinism across dispatch modes: a sweep must produce byte-identical
+//! output whether it runs serially, across worker threads (`--jobs`), or
+//! split into subprocess shards (`--shard i/n`) and merged.  These tests
+//! pin the acceptance criterion for the sharded coordinator.
+
+use qedps::config::ExperimentConfig;
+use qedps::coordinator::{self, compare_rows_json, CompareRow, ShardOpts};
+use qedps::runtime::Runtime;
+use qedps::trainer::run_experiment;
+
+fn sweep_cfg(sub: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp".into();
+    cfg.iters = 30;
+    cfg.train_n = 600;
+    cfg.test_n = 200;
+    cfg.eval_every = 15;
+    cfg.log_every = 0;
+    cfg.out_dir = std::env::temp_dir()
+        .join(format!("qedps_shard_test_{sub}"))
+        .to_string_lossy()
+        .into_owned();
+    cfg
+}
+
+fn rows_bytes(rows: &[CompareRow]) -> String {
+    compare_rows_json(rows).to_string_pretty()
+}
+
+#[test]
+fn compare_jobs2_matches_serial_bytes() {
+    let base = sweep_cfg("jobs2");
+    let schemes = ["qedps", "float"];
+    let serial = coordinator::compare_schemes_sharded(
+        &base,
+        &schemes,
+        &ShardOpts { jobs: 1, shard: None },
+    )
+    .unwrap();
+    let threaded = coordinator::compare_schemes_sharded(
+        &base,
+        &schemes,
+        &ShardOpts { jobs: 2, shard: None },
+    )
+    .unwrap();
+    assert_eq!(serial.len(), schemes.len());
+    assert_eq!(
+        rows_bytes(&serial),
+        rows_bytes(&threaded),
+        "--jobs 2 must emit the same table bytes as a serial sweep"
+    );
+}
+
+#[test]
+fn two_shard_union_matches_serial() {
+    let base = sweep_cfg("union");
+    let schemes = ["qedps", "float", "fixed13"];
+    let serial = coordinator::compare_schemes_sharded(
+        &base,
+        &schemes,
+        &ShardOpts { jobs: 1, shard: None },
+    )
+    .unwrap();
+
+    // shard 1/2 owns indices {0, 2}, shard 2/2 owns {1}; merging the two
+    // slices in scheme order must rebuild the serial table exactly
+    let mut shards = Vec::new();
+    for spec in ["1/2", "2/2"] {
+        let opts = ShardOpts {
+            jobs: 1,
+            shard: Some(coordinator::Shard::parse(spec).unwrap()),
+        };
+        shards.push(
+            coordinator::compare_schemes_sharded(&base, &schemes, &opts)
+                .unwrap()
+                .into_iter(),
+        );
+    }
+    let merged: Vec<CompareRow> = (0..schemes.len())
+        .map(|idx| shards[idx % 2].next().expect("shard slice exhausted early"))
+        .collect();
+    for it in &mut shards {
+        assert!(it.next().is_none(), "shard produced surplus rows");
+    }
+
+    let names: Vec<&str> = merged.iter().map(|r| r.scheme.as_str()).collect();
+    assert_eq!(names, schemes, "merged rows must follow scheme order");
+    assert_eq!(rows_bytes(&serial), rows_bytes(&merged));
+}
+
+#[test]
+fn history_bits_identical_across_dispatch() {
+    let cfg = sweep_cfg("bits");
+    let mut rt = Runtime::create().unwrap();
+    let direct = run_experiment(&mut rt, &cfg).unwrap();
+
+    // one-spec sweep through the sharder: fresh runtime, worker thread path
+    let sharded = coordinator::sharder::run_sharded(
+        &[()],
+        &ShardOpts { jobs: 1, shard: None },
+        |rt, _idx, _spec| run_experiment(rt, &cfg),
+    )
+    .unwrap()
+    .into_iter()
+    .flatten()
+    .next()
+    .expect("single spec must yield a history");
+
+    assert_eq!(direct.train.len(), sharded.train.len());
+    for (a, b) in direct.train.iter().zip(sharded.train.iter()) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss bits @ {}", a.iter);
+        assert_eq!(a.acc.to_bits(), b.acc.to_bits(), "acc bits @ {}", a.iter);
+        assert_eq!(a.prec.to_vec(), b.prec.to_vec(), "precision @ {}", a.iter);
+    }
+    for (a, b) in direct.eval.iter().zip(sharded.eval.iter()) {
+        assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits());
+    }
+}

@@ -98,6 +98,32 @@ fn stat_aggregation_modes_differ() {
     assert!(max_fl >= mean_fl - 0.5, "max {max_fl} vs mean {mean_fl}");
 }
 
+/// The step hot path must run entirely on pre-pinned input literals:
+/// after the engine is constructed, steady-state stepping performs zero
+/// `Literal` builds (refills via `copy_raw_from` don't count — or allocate).
+#[test]
+fn step_hot_path_builds_no_literals() {
+    let mut rt = Runtime::create().unwrap();
+    let cfg = quick_cfg("qedps");
+    let (train, _, _) = qedps::data::load_default(cfg.train_n, cfg.test_n);
+    let mut t = Trainer::new(&mut rt, cfg.clone()).unwrap();
+    let mut b = qedps::data::Batcher::new(&train, t.train_batch_size(), cfg.seed);
+    for i in 0..3 {
+        t.fill_batch(&mut b);
+        t.step(i).unwrap();
+    }
+    let before = qedps::runtime::literal_builds();
+    for i in 3..13 {
+        t.fill_batch(&mut b);
+        t.step(i).unwrap();
+    }
+    assert_eq!(
+        qedps::runtime::literal_builds(),
+        before,
+        "steady-state Trainer::step must not construct literals"
+    );
+}
+
 #[test]
 fn checkpoint_roundtrip_resumes_identically() {
     let mut rt = Runtime::create().unwrap();

@@ -18,6 +18,13 @@ for arg in "$@"; do
     esac
 done
 
+echo "== tier1: cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "rustfmt not installed; skipping format check"
+fi
+
 echo "== tier1: cargo build --release =="
 cargo build --release
 
