@@ -82,8 +82,10 @@ def _eval_io(spec: M.ModelSpec):
     ins.append({"name": "x", **_spec((EVAL_BATCH,) + tuple(spec.input_shape))})
     ins.append({"name": "y", **_spec((EVAL_BATCH,)), "dtype": "i32"})
     ins.append({"name": "prec", **_spec((6,))})
-    outs = [{"name": "loss_sum", **_spec(())},
-            {"name": "correct", **_spec(())}]
+    # per-example vectors: the host masks wrapped tail entries exactly
+    # (the Rust engine detects "loss_vec" and switches to exact accumulation)
+    outs = [{"name": "loss_vec", **_spec((EVAL_BATCH,))},
+            {"name": "correct_vec", **_spec((EVAL_BATCH,))}]
     return ins, outs
 
 
@@ -142,6 +144,11 @@ def build_modules():
             mods[f"{mname}_{kind}"] = (fn, args, {
                 "kind": "train", "model": mname, "batch": TRAIN_BATCH,
                 "quantized": quantized, "stochastic": stochastic,
+                # params + momenta (the first 2P entry parameters) are
+                # donated to the matching outputs: PJRT may alias the
+                # buffers in place, so a device-resident step allocates
+                # nothing for state
+                "donated": True,
                 "inputs": ins, "outputs": outs,
                 "sites": [{"name": n, "class": c} for n, c in sites],
             })
@@ -201,7 +208,12 @@ def main():
             continue
         path = os.path.join(args.out_dir, f"{name}.hlo.txt")
         print(f"[aot] lowering {name} ...", flush=True)
-        lowered = jax.jit(fn).lower(*eargs)
+        donate = ()
+        if meta.get("donated"):
+            # donate params + momenta (the first 2P flat args) so XLA emits
+            # input-output aliasing for the state tensors
+            donate = tuple(range(2 * len(M.MODELS[meta["model"]].params)))
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*eargs)
         text = to_hlo_text(lowered)
         with open(path, "w") as f:
             f.write(text)

@@ -14,8 +14,10 @@ For each network we build, and ``aot.py`` lowers:
   per-site (E, R) stat vectors the Rust DPS controller consumes;
 * a **float32 baseline train step** — identical update rule, no rounding;
 * a **quantized eval step** — deterministic round-to-nearest inference
-  (stochastic noise is a training-time tool), returning summed loss and
-  correct-prediction count so L3 can aggregate over the test set;
+  (stochastic noise is a training-time tool), returning *per-example* loss
+  and correctness vectors so L3 can aggregate over the test set while
+  masking any wrapped tail entries exactly (test sets whose size is not a
+  multiple of the eval batch);
 * a **float eval step**.
 
 All steps take *flat* argument lists (params..., mom..., x, y, lr, seed,
@@ -338,7 +340,12 @@ def train_step_sites(spec: ModelSpec, quantized: bool = True):
 
 
 def make_eval_step(spec: ModelSpec, quantized: bool):
-    """Eval over one batch: (params[P], x, y, prec) -> (loss_sum, correct).
+    """Eval over one batch: (params[P], x, y, prec) -> (loss_vec, correct_vec).
+
+    Outputs are *per-example* f32[batch] vectors — the host sums only the
+    first `valid` entries of a wrapped tail batch, so test sets whose size
+    is not a multiple of the eval batch evaluate exactly (bit-identical to
+    a batch-size-1 sweep) instead of approximately rescaling batch sums.
 
     Round-to-nearest (deterministic) activation quantization; stored weights
     are already on-grid from the train step's weight site.
@@ -352,11 +359,13 @@ def make_eval_step(spec: ModelSpec, quantized: bool):
         ctx = QuantCtx(prec, jnp.float32(0.0), stochastic=False,
                        enabled=quantized)
         logits = spec.forward(params, x, ctx)
-        loss_sum = _xent(logits, y) * jnp.float32(x.shape[0])
+        logp = jax.nn.log_softmax(logits)
+        loss_vec = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+        correct_vec = (jnp.argmax(logits, axis=1) == y).astype(jnp.float32)
         if not quantized:
             # keep `prec` in the entry signature (see make_train_step)
-            loss_sum = loss_sum + 0.0 * jnp.sum(prec)
-        return loss_sum, _correct(logits, y)
+            loss_vec = loss_vec + 0.0 * jnp.sum(prec)
+        return loss_vec, correct_vec
 
     return fn
 

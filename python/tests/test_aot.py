@@ -89,6 +89,30 @@ def test_float_train_keeps_seed_and_prec_alive(modules):
     )
 
 
+def test_eval_modules_are_per_example(modules):
+    """Eval artifacts emit f32[EVAL_BATCH] vectors so the host can mask
+    wrapped tail entries exactly (non-multiple test sets)."""
+    for mname in M.MODELS:
+        for kind in ("eval", "eval_float"):
+            fn, eargs, meta = modules[f"{mname}_{kind}"]
+            outs = {o["name"]: o["shape"] for o in meta["outputs"]}
+            assert outs["loss_vec"] == [aot.EVAL_BATCH]
+            assert outs["correct_vec"] == [aot.EVAL_BATCH]
+            shapes = jax.eval_shape(fn, *eargs)
+            assert [tuple(s.shape) for s in shapes] == \
+                [(aot.EVAL_BATCH,), (aot.EVAL_BATCH,)]
+
+
+def test_train_modules_declare_donation(modules):
+    """Train modules donate params+momenta (the first 2P args); eval
+    modules must NOT donate — they re-use the resident buffers."""
+    for mname in M.MODELS:
+        for kind in ("train", "train_nearest", "train_float"):
+            assert modules[f"{mname}_{kind}"][2]["donated"] is True
+        for kind in ("eval", "eval_float"):
+            assert not modules[f"{mname}_{kind}"][2].get("donated", False)
+
+
 def test_params_npz_matches_manifest(tmp_path):
     for mname, spec in M.MODELS.items():
         params = M.init_params(spec, seed=0)

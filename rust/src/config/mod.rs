@@ -76,6 +76,11 @@ pub struct ExperimentConfig {
     pub faults: Vec<String>,
     /// Seed for fault-site selection (independent of the data seed).
     pub fault_seed: u64,
+    /// Keep parameters/momenta device-resident between steps (zero
+    /// steady-state host↔device state transfers).  `false` forces the
+    /// host-literal path; the engine also falls back automatically when the
+    /// platform can't execute against device buffers.
+    pub device_params: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -114,6 +119,7 @@ impl Default for ExperimentConfig {
             resume: false,
             faults: Vec::new(),
             fault_seed: 7,
+            device_params: true,
         }
     }
 }
@@ -229,6 +235,9 @@ impl ExperimentConfig {
                 _ => bail!("faults.inject takes a spec string or array of specs"),
             },
             "faults.seed" | "fault_seed" => self.fault_seed = want_u()?,
+            "runtime.device_params" | "device_params" => {
+                self.device_params = val.as_bool().context("expected bool")?
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -344,6 +353,17 @@ mod tests {
         assert!(c.apply_set("watchdog=1").is_err(), "watchdog wants a bool");
         c.apply_set("watchdog=false").unwrap();
         assert!(!c.watchdog);
+    }
+
+    #[test]
+    fn device_params_flag() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.device_params, "device residency is the default");
+        c.apply_set("runtime.device_params=false").unwrap();
+        assert!(!c.device_params);
+        c.apply_set("device_params=true").unwrap();
+        assert!(c.device_params);
+        assert!(c.apply_set("device_params=1").is_err(), "wants a bool");
     }
 
     #[test]

@@ -99,25 +99,32 @@ pub fn fig4_sharded(
     Ok(out)
 }
 
-/// Eq.1-vs-Eq.2 A/B (Gupta's stochastic-vs-nearest comparison): identical
-/// policy and workload, only the rounding artifact differs.
-///
-/// Run at an aggressively narrow *fixed* format — Gupta et al.'s result is
-/// that nearest-rounding's bias (small gradient updates rounding to zero)
-/// only bites when the fraction is short; at 20+ bits both round the same.
-pub fn rounding_ab(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<()> {
+/// The rounding A/B lineup (Eq.2 stochastic vs Eq.1 nearest).
+pub const ROUNDING_TAGS: [&str; 2] = ["stochastic", "nearest"];
+
+/// One arm of the rounding A/B: the `fixed` scheme at an aggressively
+/// narrow format, with only the rounding artifact differing.
+fn rounding_one(
+    rt: &mut Runtime,
+    cfg: &ExperimentConfig,
+    tag: &str,
+) -> Result<crate::metrics::RunSummary> {
     use crate::fixedpoint::Format;
-    let mut rows = Vec::new();
-    for tag in ["stochastic", "nearest"] {
-        let mut c = cfg.clone();
-        c.scheme = "fixed".into();
-        c.init_weights = Format::new(2, 12);
-        c.init_acts = Format::new(4, 10);
-        c.init_grads = Format::new(2, 12);
-        c.force_rounding = Some(tag.into());
-        let hist = super::run_and_record(rt, &c, &format!("roundab_{}_{tag}", c.model))?;
-        rows.push((tag, hist.summary()));
+    let mut c = cfg.clone();
+    c.scheme = "fixed".into();
+    c.init_weights = Format::new(2, 12);
+    c.init_acts = Format::new(4, 10);
+    c.init_grads = Format::new(2, 12);
+    c.force_rounding = Some(tag.into());
+    let run_tag = format!("roundab_{}_{tag}", c.model);
+    // per-arm checkpoint subdir: concurrent arms must not cross-restore
+    if let Some(d) = &cfg.checkpoint_dir {
+        c.checkpoint_dir = Some(format!("{d}/{run_tag}"));
     }
+    Ok(super::run_and_record(rt, &c, &run_tag)?.summary())
+}
+
+fn render_rounding(rows: &[(String, crate::metrics::RunSummary)]) {
     println!("\nRounding A/B (Eq.2 stochastic vs Eq.1 nearest):");
     for (tag, s) in rows {
         println!(
@@ -125,7 +132,44 @@ pub fn rounding_ab(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<()> {
             s.final_test_acc, s.best_test_acc, s.final_train_loss
         );
     }
-    Ok(())
+}
+
+/// Eq.1-vs-Eq.2 A/B (Gupta's stochastic-vs-nearest comparison): identical
+/// policy and workload, only the rounding artifact differs — serially, on
+/// the caller's runtime.
+///
+/// Run at an aggressively narrow *fixed* format — Gupta et al.'s result is
+/// that nearest-rounding's bias (small gradient updates rounding to zero)
+/// only bites when the fraction is short; at 20+ bits both round the same.
+pub fn rounding_ab(
+    rt: &mut Runtime,
+    cfg: &ExperimentConfig,
+) -> Result<Vec<(String, crate::metrics::RunSummary)>> {
+    let mut rows = Vec::new();
+    for tag in ROUNDING_TAGS {
+        rows.push((tag.to_string(), rounding_one(rt, cfg, tag)?));
+    }
+    render_rounding(&rows);
+    Ok(rows)
+}
+
+/// Rounding A/B, sharded: both arms are independent, so they dispatch
+/// through [`super::sharder::run_sharded`] (`--jobs`/`--shard`) and merge
+/// back in lineup order — identical output to [`rounding_ab`].
+pub fn rounding_ab_sharded(
+    cfg: &ExperimentConfig,
+    opts: &super::ShardOpts,
+) -> Result<Vec<(String, crate::metrics::RunSummary)>> {
+    let sums = super::sharder::run_sharded(&ROUNDING_TAGS, opts, |rt, _idx, tag| {
+        rounding_one(rt, cfg, tag)
+    })?;
+    let rows: Vec<(String, crate::metrics::RunSummary)> = ROUNDING_TAGS
+        .iter()
+        .zip(sums)
+        .filter_map(|(t, s)| s.map(|s| (t.to_string(), s)))
+        .collect();
+    render_rounding(&rows);
+    Ok(rows)
 }
 
 /// §6 hardware-speedup claim: measured bit trajectory → MAC-sim cycles.

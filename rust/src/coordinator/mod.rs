@@ -1,16 +1,19 @@
 //! Experiment drivers: everything `repro <cmd>` runs to regenerate the
 //! paper's figures and tables (DESIGN.md §3 experiment index).
 //!
-//! Multi-run sweeps (`compare`, Fig. 4) dispatch through
+//! Multi-run sweeps (`compare`, Fig. 4, the rounding A/B) dispatch through
 //! [`sharder::run_sharded`]: `--jobs N` fans runs out across worker
 //! threads (each with its own [`Runtime`]), `--shard i/n` partitions a
 //! sweep across subprocesses, and results always merge in input order so
-//! the emitted tables are byte-identical to a serial run.
+//! the emitted tables are byte-identical to a serial run.  Shard slices
+//! written as `compare.shard-i-of-n.json` are rejoined by
+//! [`merge_shard_slices`] (`repro compare merge`), which errors on
+//! overlapping, duplicated, or missing shards instead of concatenating.
 
 pub mod figures;
 pub mod sharder;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::ExperimentConfig;
 use crate::metrics::History;
@@ -101,17 +104,18 @@ pub fn compare_schemes(
 
 /// Sharded Table-1 sweep: independent scheme runs dispatched through
 /// [`sharder::run_sharded`] (worker threads and/or a `--shard i/n` slice),
-/// merged back in scheme order.  With `jobs = 1` and no shard this is
-/// equivalent to [`compare_schemes`] — same rows, same bytes.
+/// merged back in scheme order.  Results are positional — `None` marks an
+/// index owned by another shard — so slices can be rejoined losslessly by
+/// [`merge_shard_slices`].  With `jobs = 1` and no shard this is equivalent
+/// to [`compare_schemes`] — same rows, same bytes.
 pub fn compare_schemes_sharded(
     base: &ExperimentConfig,
     schemes: &[&str],
     opts: &ShardOpts,
-) -> Result<Vec<CompareRow>> {
-    let rows = sharder::run_sharded(schemes, opts, |rt, _idx, scheme| {
+) -> Result<Vec<Option<CompareRow>>> {
+    sharder::run_sharded(schemes, opts, |rt, _idx, scheme| {
         compare_one(rt, base, scheme)
-    })?;
-    Ok(rows.into_iter().flatten().collect())
+    })
 }
 
 pub fn print_compare_table(rows: &[CompareRow]) {
@@ -132,23 +136,279 @@ pub fn print_compare_table(rows: &[CompareRow]) {
     println!();
 }
 
+/// The canonical JSON field list of one row — shared by the serial table
+/// and the shard-slice format so a merged table re-emits byte-identically.
+fn row_json_fields(r: &CompareRow) -> Vec<(&'static str, Json)> {
+    vec![
+        ("scheme", Json::Str(r.scheme.clone())),
+        ("final_acc", Json::Num(r.final_acc as f64)),
+        ("best_acc", Json::Num(r.best_acc as f64)),
+        ("mean_w_bits", Json::Num(r.mean_w_bits)),
+        ("mean_a_bits", Json::Num(r.mean_a_bits)),
+        ("mean_g_bits", Json::Num(r.mean_g_bits)),
+        ("converged", Json::Bool(r.converged)),
+        ("hw_speedup", Json::Num(r.hw_speedup)),
+        ("watchdog_trips", Json::Num(r.watchdog_trips as f64)),
+        ("recoveries", Json::Num(r.recoveries as f64)),
+    ]
+}
+
 pub fn compare_rows_json(rows: &[CompareRow]) -> Json {
-    Json::Arr(
-        rows.iter()
-            .map(|r| {
-                Json::obj(vec![
-                    ("scheme", Json::Str(r.scheme.clone())),
-                    ("final_acc", Json::Num(r.final_acc as f64)),
-                    ("best_acc", Json::Num(r.best_acc as f64)),
-                    ("mean_w_bits", Json::Num(r.mean_w_bits)),
-                    ("mean_a_bits", Json::Num(r.mean_a_bits)),
-                    ("mean_g_bits", Json::Num(r.mean_g_bits)),
-                    ("converged", Json::Bool(r.converged)),
-                    ("hw_speedup", Json::Num(r.hw_speedup)),
-                    ("watchdog_trips", Json::Num(r.watchdog_trips as f64)),
-                    ("recoveries", Json::Num(r.recoveries as f64)),
-                ])
+    Json::Arr(rows.iter().map(|r| Json::obj(row_json_fields(r))).collect())
+}
+
+impl CompareRow {
+    /// Parse one row back from its JSON form (shard-slice merging).
+    pub fn from_json(j: &Json) -> Result<CompareRow> {
+        let f = |k: &str| -> Result<f64> {
+            j.get(k).as_f64().with_context(|| format!("row field '{k}'"))
+        };
+        Ok(CompareRow {
+            scheme: j.get("scheme").as_str().context("row field 'scheme'")?.to_string(),
+            final_acc: f("final_acc")? as f32,
+            best_acc: f("best_acc")? as f32,
+            mean_w_bits: f("mean_w_bits")?,
+            mean_a_bits: f("mean_a_bits")?,
+            mean_g_bits: f("mean_g_bits")?,
+            converged: j.get("converged").as_bool().context("row field 'converged'")?,
+            hw_speedup: f("hw_speedup")?,
+            watchdog_trips: f("watchdog_trips")? as u64,
+            recoveries: f("recoveries")? as u64,
+        })
+    }
+}
+
+/// One parsed `compare.shard-i-of-n.json` slice: which shard it is, how
+/// many shards the sweep was split into, how many rows the *full* sweep
+/// has, and this shard's rows tagged with their sweep index.
+#[derive(Debug, Clone)]
+pub struct ShardSlice {
+    /// 1-based shard id (matches the `--shard i/n` syntax and filename).
+    pub shard: usize,
+    pub of: usize,
+    /// Total rows across all shards (the sweep's scheme count).
+    pub total: usize,
+    pub rows: Vec<(usize, CompareRow)>,
+}
+
+/// Serialize one shard's positional results as a mergeable slice: rows
+/// carry their sweep `index`, the envelope carries `shard`/`of`/`total`.
+pub fn compare_shard_json(rows: &[Option<CompareRow>], shard: &Shard) -> Json {
+    let tagged: Vec<Json> = rows
+        .iter()
+        .enumerate()
+        .filter_map(|(idx, r)| r.as_ref().map(|r| (idx, r)))
+        .map(|(idx, r)| {
+            let mut fields = row_json_fields(r);
+            fields.push(("index", Json::Num(idx as f64)));
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("shard", Json::Num((shard.index + 1) as f64)),
+        ("of", Json::Num(shard.of as f64)),
+        ("total", Json::Num(rows.len() as f64)),
+        ("rows", Json::Arr(tagged)),
+    ])
+}
+
+/// Parse one shard-slice file's text.
+pub fn parse_shard_slice(text: &str) -> Result<ShardSlice> {
+    let j = Json::parse(text).context("shard slice json")?;
+    let shard = j.get("shard").as_usize().context("slice field 'shard'")?;
+    let of = j.get("of").as_usize().context("slice field 'of'")?;
+    let total = j.get("total").as_usize().context("slice field 'total'")?;
+    anyhow::ensure!(of >= 1, "shard count must be >= 1");
+    anyhow::ensure!(
+        (1..=of).contains(&shard),
+        "shard id {shard} out of range 1..={of}"
+    );
+    let rows = j
+        .get("rows")
+        .as_arr()
+        .context("slice field 'rows'")?
+        .iter()
+        .map(|r| -> Result<(usize, CompareRow)> {
+            let idx = r.get("index").as_usize().context("row field 'index'")?;
+            anyhow::ensure!(idx < total, "row index {idx} out of range 0..{total}");
+            Ok((idx, CompareRow::from_json(r)?))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ShardSlice { shard, of, total, rows })
+}
+
+/// Join `compare.shard-i-of-n.json` slices back into one full table, in
+/// sweep order.  Errors — instead of silently concatenating — when the
+/// slices disagree on `of`/`total`, when a shard id appears twice, when a
+/// shard is missing, or when row indices overlap or leave gaps.
+pub fn merge_shard_slices(slices: &[ShardSlice]) -> Result<Vec<CompareRow>> {
+    anyhow::ensure!(!slices.is_empty(), "merge needs at least one shard file");
+    let (of, total) = (slices[0].of, slices[0].total);
+    let mut seen_shards = vec![false; of];
+    for s in slices {
+        anyhow::ensure!(
+            s.of == of && s.total == total,
+            "shard {} is from a different sweep ({}-way/{} rows, expected {}-way/{} rows)",
+            s.shard,
+            s.of,
+            s.total,
+            of,
+            total
+        );
+        anyhow::ensure!(
+            !seen_shards[s.shard - 1],
+            "shard {}/{of} supplied more than once",
+            s.shard
+        );
+        seen_shards[s.shard - 1] = true;
+    }
+    if let Some(missing) = seen_shards.iter().position(|&ok| !ok) {
+        anyhow::bail!("missing shard {}/{of}", missing + 1);
+    }
+    let mut merged: Vec<Option<CompareRow>> = (0..total).map(|_| None).collect();
+    for s in slices {
+        for (idx, row) in &s.rows {
+            anyhow::ensure!(
+                merged[*idx].is_none(),
+                "row index {idx} ('{}') appears in more than one shard",
+                row.scheme
+            );
+            merged[*idx] = Some(row.clone());
+        }
+    }
+    merged
+        .into_iter()
+        .enumerate()
+        .map(|(idx, r)| r.with_context(|| format!("no shard produced row index {idx}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(scheme: &str, acc: f32) -> CompareRow {
+        CompareRow {
+            scheme: scheme.to_string(),
+            final_acc: acc,
+            best_acc: acc + 0.01,
+            mean_w_bits: 14.5,
+            mean_a_bits: 12.25,
+            mean_g_bits: 28.0,
+            converged: true,
+            hw_speedup: 1.75,
+            watchdog_trips: 1,
+            recoveries: 0,
+        }
+    }
+
+    fn split(rows: &[CompareRow], of: usize) -> Vec<ShardSlice> {
+        (1..=of)
+            .map(|i| {
+                let shard = Shard { index: i - 1, of };
+                let slice: Vec<Option<CompareRow>> = rows
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, r)| shard.selects(idx).then(|| r.clone()))
+                    .collect();
+                parse_shard_slice(&compare_shard_json(&slice, &shard).to_string()).unwrap()
             })
-            .collect(),
-    )
+            .collect()
+    }
+
+    #[test]
+    fn row_json_roundtrip() {
+        let r = row("qedps", 0.97);
+        let back = CompareRow::from_json(&Json::obj(row_json_fields(&r))).unwrap();
+        assert_eq!(
+            Json::obj(row_json_fields(&r)).to_string(),
+            Json::obj(row_json_fields(&back)).to_string()
+        );
+    }
+
+    #[test]
+    fn merge_rejoins_slices_byte_identically() {
+        let rows: Vec<CompareRow> =
+            ["qedps", "float", "fixed13", "na", "cn14"]
+                .iter()
+                .enumerate()
+                .map(|(i, s)| row(s, 0.9 + i as f32 * 0.01))
+                .collect();
+        for of in 1..=3 {
+            let merged = merge_shard_slices(&split(&rows, of)).unwrap();
+            assert_eq!(
+                compare_rows_json(&merged).to_string_pretty(),
+                compare_rows_json(&rows).to_string_pretty(),
+                "{of}-way split must merge back byte-identically"
+            );
+        }
+        // merge order must not matter
+        let mut slices = split(&rows, 3);
+        slices.reverse();
+        let merged = merge_shard_slices(&slices).unwrap();
+        assert_eq!(
+            compare_rows_json(&merged).to_string(),
+            compare_rows_json(&rows).to_string()
+        );
+    }
+
+    #[test]
+    fn merge_rejects_missing_shard() {
+        let rows: Vec<CompareRow> = ["a", "b", "c"].iter().map(|s| row(s, 0.9)).collect();
+        let mut slices = split(&rows, 3);
+        slices.remove(1);
+        let err = merge_shard_slices(&slices).unwrap_err().to_string();
+        assert!(err.contains("missing shard 2/3"), "{err}");
+    }
+
+    #[test]
+    fn merge_rejects_duplicate_shard() {
+        let rows: Vec<CompareRow> = ["a", "b"].iter().map(|s| row(s, 0.9)).collect();
+        let mut slices = split(&rows, 2);
+        slices.push(slices[0].clone());
+        let err = merge_shard_slices(&slices).unwrap_err().to_string();
+        assert!(err.contains("more than once"), "{err}");
+    }
+
+    #[test]
+    fn merge_rejects_overlapping_rows() {
+        let rows: Vec<CompareRow> = ["a", "b"].iter().map(|s| row(s, 0.9)).collect();
+        let mut slices = split(&rows, 2);
+        // shard 2 claims index 0 as well — overlap, not a valid partition
+        slices[1].rows.push((0, row("a", 0.9)));
+        let err = merge_shard_slices(&slices).unwrap_err().to_string();
+        assert!(err.contains("more than one shard"), "{err}");
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_sweeps() {
+        let rows2: Vec<CompareRow> = ["a", "b"].iter().map(|s| row(s, 0.9)).collect();
+        let rows3: Vec<CompareRow> = ["a", "b", "c"].iter().map(|s| row(s, 0.9)).collect();
+        let mut slices = split(&rows2, 2);
+        slices[1] = split(&rows3, 2).remove(1);
+        let err = merge_shard_slices(&slices).unwrap_err().to_string();
+        assert!(err.contains("different sweep"), "{err}");
+    }
+
+    #[test]
+    fn merge_rejects_gap() {
+        let rows: Vec<CompareRow> = ["a", "b", "c"].iter().map(|s| row(s, 0.9)).collect();
+        let mut slices = split(&rows, 3);
+        slices[0].rows.clear(); // shard present but its row vanished
+        let err = merge_shard_slices(&slices).unwrap_err().to_string();
+        assert!(err.contains("no shard produced row index 0"), "{err}");
+    }
+
+    #[test]
+    fn slice_parse_validates_envelope() {
+        assert!(parse_shard_slice("{}").is_err());
+        assert!(
+            parse_shard_slice(r#"{"shard": 3, "of": 2, "total": 1, "rows": []}"#).is_err(),
+            "shard id beyond count"
+        );
+        assert!(
+            parse_shard_slice(r#"{"shard": 0, "of": 2, "total": 1, "rows": []}"#).is_err(),
+            "shard id is 1-based"
+        );
+    }
 }

@@ -9,7 +9,7 @@ pub mod batcher;
 pub mod mnist;
 pub mod synth;
 
-pub use batcher::Batcher;
+pub use batcher::{Batcher, EvalBatcher};
 
 pub const IMG_SIDE: usize = 28;
 pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
@@ -33,6 +33,16 @@ impl Dataset {
 
     pub fn image(&self, i: usize) -> &[f32] {
         &self.images[i * IMG_PIXELS..(i + 1) * IMG_PIXELS]
+    }
+
+    /// Contiguous sub-range `[lo, hi)` as an owned dataset — reference
+    /// slices for piecewise-vs-whole eval-exactness checks.
+    pub fn slice(&self, lo: usize, hi: usize) -> Dataset {
+        assert!(lo <= hi && hi <= self.n, "slice {lo}..{hi} of {}", self.n);
+        Dataset::new(
+            self.images[lo * IMG_PIXELS..hi * IMG_PIXELS].to_vec(),
+            self.labels[lo..hi].to_vec(),
+        )
     }
 
     /// Class histogram (useful for sanity checks and tests).

@@ -6,15 +6,25 @@
 //! AOT-lowered to HLO text by `python/compile/aot.py`; this crate loads the
 //! artifacts through the PJRT C API and owns everything at run time:
 //!
-//! * [`runtime`] — manifest-driven loading/execution of the AOT artifacts;
+//! * [`runtime`] — manifest-driven loading/execution of the AOT artifacts,
+//!   including the device-buffer layer ([`runtime::device`]): parameters
+//!   and momenta stay resident on the device between steps (the train
+//!   modules are lowered with input→output donation), and
+//!   [`runtime::host_transfers()`] counts every state-tensor copy across
+//!   the host↔device boundary so perf tests can assert the steady state
+//!   performs none;
 //! * [`policy`] — the paper's contribution: the `<IL, FL>` controllers
 //!   (quantization-error + overflow driven scaling, plus every baseline the
 //!   paper compares against);
 //! * [`trainer`] — the training loop, split into three layers:
-//!   [`trainer::StepEngine`] (compiled executables + pre-pinned input
-//!   literals; the zero-allocation step hot path), [`trainer::Session`]
-//!   (experiment lifecycle: data, watchdog, rollback, checkpoints), and the
-//!   thin [`trainer::Trainer`] facade (policy + history around the engine);
+//!   [`trainer::StepEngine`] (compiled executables + device-resident
+//!   parameter state + pre-pinned input literals; the zero-allocation,
+//!   zero-state-transfer step hot path, with a host-literal fallback, and
+//!   exact per-example eval accumulation via [`trainer::EvalAccum`] so
+//!   non-multiple test sets score bit-identically to a batch-size-1
+//!   sweep), [`trainer::Session`] (experiment lifecycle: data, watchdog,
+//!   rollback, checkpoints), and the thin [`trainer::Trainer`] facade
+//!   (policy + history around the engine);
 //! * [`fixedpoint`] — bit-exact software mirror of the L1 quantizer (used
 //!   by parity tests, the MAC simulator and the policy unit tests);
 //! * [`data`] — MNIST IDX loader + the offline synthetic-digit substitute;

@@ -4,7 +4,8 @@
 //! repro train    [--model M] [--scheme S] [--iters N] [--config F] [--set k=v]...
 //! repro figures  --fig 3|4   [--jobs N] [--shard i/n]  regenerate paper figures
 //! repro compare  [--schemes a,b,c] [--jobs N] [--shard i/n]  Table-1 head-to-head
-//! repro rounding-ab                                 Eq.1 vs Eq.2 A/B
+//! repro compare merge <files...>                    join compare.shard-*.json slices
+//! repro rounding-ab [--jobs N] [--shard i/n]        Eq.1 vs Eq.2 A/B
 //! repro macsim   [--model M]                        flexible-MAC speedup table
 //! repro bench step [--model M] [--scheme S]         step-loop micro-benchmark
 //! repro ckpt list|verify|prune --checkpoint-dir D   checkpoint maintenance
@@ -37,7 +38,7 @@ const SPEC: Spec = Spec {
         ("keep", "N", "checkpoints to keep (GC / `ckpt prune`); 0 = keep all"),
         ("fault", "SPEC", "inject a fault: nan@N|inf@N|bitflip@N[:weight|grad]|read-fail[:N] (repeatable)"),
         ("fault-seed", "N", "seed for fault-site selection"),
-        ("jobs", "N", "worker threads for multi-run sweeps (compare / fig 4)"),
+        ("jobs", "N", "worker threads for multi-run sweeps (compare / fig 4 / rounding-ab)"),
         ("shard", "i/n", "run only the i-th of n sweep shards (1-based)"),
     ],
     switches: &[
@@ -45,6 +46,7 @@ const SPEC: Spec = Spec {
         ("quiet", "warnings only"),
         ("resume", "resume from the newest complete checkpoint"),
         ("no-watchdog", "disable the divergence watchdog"),
+        ("no-device-params", "keep params host-side (literal upload every step)"),
     ],
 };
 
@@ -86,6 +88,9 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if args.switch("no-watchdog") {
         cfg.watchdog = false;
     }
+    if args.switch("no-device-params") {
+        cfg.device_params = false;
+    }
     for kv in args.flag_all("set") {
         cfg.apply_set(kv)?;
     }
@@ -93,13 +98,15 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
 }
 
 /// `repro bench step`: the step-loop micro-benchmark behind the pre-pinned
-/// literal refactor.  Reports step latency, asserts the hot loop performs
-/// zero per-iteration literal constructions, and prices what the
-/// pre-refactor build-a-literal-per-input path would cost on top.
+/// literal refactor and device-resident parameter state.  Reports step
+/// latency, asserts the hot loop performs zero per-iteration literal
+/// constructions and (when parameters stay device-resident) zero host↔device
+/// state transfers, and prices what the pre-refactor
+/// build-a-literal-per-input path would cost on top.
 fn bench_step(cfg: &ExperimentConfig, iters: u64) -> Result<()> {
     use qedps::bench::{bench_with, black_box, BenchOpts};
     use qedps::data::Batcher;
-    use qedps::runtime::{literal_builds, literal_f32, literal_i32};
+    use qedps::runtime::{host_transfers, literal_builds, literal_f32, literal_i32};
     use qedps::trainer::Trainer;
 
     let mut rt = Runtime::create()?;
@@ -114,6 +121,7 @@ fn bench_step(cfg: &ExperimentConfig, iters: u64) -> Result<()> {
     let opts = BenchOpts { warmup_iters: 3, min_iters: iters, min_time_s: 0.0 };
     let mut iter = 0u64;
     let before = literal_builds();
+    let xfers_before = host_transfers();
     bench_with(
         &format!("step/{}/{} (pinned inputs)", cfg.model, cfg.scheme),
         &opts,
@@ -124,7 +132,16 @@ fn bench_step(cfg: &ExperimentConfig, iters: u64) -> Result<()> {
         },
     );
     let builds = literal_builds() - before;
+    let xfers = host_transfers() - xfers_before;
     println!("literal builds across {iter} steps: {builds} (target: 0)");
+    if trainer.device_resident() {
+        println!("host<->device state transfers across {iter} steps: {xfers} (target: 0)");
+    } else {
+        println!(
+            "host<->device state transfers across {iter} steps: {xfers} \
+             (host-literal fallback path; expected nonzero)"
+        );
+    }
 
     // what the pre-refactor path paid per iteration: five input literals
     // (x, y, lr, seed, prec) constructed from host buffers every step
@@ -149,7 +166,19 @@ fn bench_step(cfg: &ExperimentConfig, iters: u64) -> Result<()> {
         builds == 0,
         "step loop constructed {builds} literals over {iter} iterations"
     );
-    println!("ok: step hot path is literal-allocation-free");
+    if trainer.device_resident() {
+        anyhow::ensure!(
+            xfers == 0,
+            "device-resident step loop performed {xfers} host<->device state \
+             transfers over {iter} iterations"
+        );
+        println!("ok: step hot path is literal-allocation-free and transfer-free");
+    } else {
+        println!(
+            "ok: step hot path is literal-allocation-free \
+             (device residency unavailable on this platform)"
+        );
+    }
     Ok(())
 }
 
@@ -230,6 +259,31 @@ fn main() -> Result<()> {
                 }
             }
         }
+        "compare" if args.pos(0) == Some("merge") => {
+            // `repro compare merge <files...>` — join per-shard slices back
+            // into the byte-identical serial compare.json.
+            let cfg = build_config(&args)?;
+            let files = &args.positional[1..];
+            anyhow::ensure!(
+                !files.is_empty(),
+                "compare merge needs at least one compare.shard-i-of-n.json file"
+            );
+            let mut slices = Vec::with_capacity(files.len());
+            for f in files {
+                let text = std::fs::read_to_string(f)
+                    .with_context(|| format!("reading shard slice {f}"))?;
+                slices.push(
+                    coordinator::parse_shard_slice(&text)
+                        .with_context(|| format!("parsing shard slice {f}"))?,
+                );
+            }
+            let rows = coordinator::merge_shard_slices(&slices)?;
+            coordinator::print_compare_table(&rows);
+            let out = std::path::Path::new(&cfg.out_dir).join("compare.json");
+            std::fs::create_dir_all(&cfg.out_dir)?;
+            std::fs::write(&out, coordinator::compare_rows_json(&rows).to_string_pretty())?;
+            println!("merged {} shard slices -> {}", slices.len(), out.display());
+        }
         "compare" => {
             let cfg = build_config(&args)?;
             let opts = shard_opts(&args)?;
@@ -243,21 +297,34 @@ fn main() -> Result<()> {
             // serial and threaded runs share one dispatch path, so
             // `--jobs 2` emits byte-identical tables to `--jobs 1`
             let rows = coordinator::compare_schemes_sharded(&cfg, &schemes, &opts)?;
-            coordinator::print_compare_table(&rows);
-            let out_name = match opts.shard {
-                // each subprocess shard writes its slice; merge offline
-                Some(s) => format!("compare.shard-{}-of-{}.json", s.index + 1, s.of),
-                None => "compare.json".to_string(),
+            let done: Vec<coordinator::CompareRow> = rows.iter().flatten().cloned().collect();
+            coordinator::print_compare_table(&done);
+            std::fs::create_dir_all(&cfg.out_dir)?;
+            let (out_name, json) = match &opts.shard {
+                // each subprocess shard writes its indexed slice;
+                // `repro compare merge` joins them offline
+                Some(s) => (
+                    format!("compare.shard-{}-of-{}.json", s.index + 1, s.of),
+                    coordinator::compare_shard_json(&rows, s),
+                ),
+                None => ("compare.json".to_string(), coordinator::compare_rows_json(&done)),
             };
             let out = std::path::Path::new(&cfg.out_dir).join(out_name);
-            std::fs::create_dir_all(&cfg.out_dir)?;
-            std::fs::write(&out, coordinator::compare_rows_json(&rows).to_string_pretty())?;
+            std::fs::write(&out, json.to_string_pretty())?;
             println!("wrote {}", out.display());
         }
         "rounding-ab" => {
             let cfg = build_config(&args)?;
-            let mut rt = Runtime::create()?;
-            figures::rounding_ab(&mut rt, &cfg)?;
+            let opts = shard_opts(&args)?;
+            // same dispatch contract as fig 4: the sharded path with jobs=1
+            // and no shard filter emits byte-identical output to the serial
+            // path, so either route satisfies the equivalence tests
+            if opts.jobs > 1 || opts.shard.is_some() {
+                figures::rounding_ab_sharded(&cfg, &opts)?;
+            } else {
+                let mut rt = Runtime::create()?;
+                figures::rounding_ab(&mut rt, &cfg)?;
+            }
         }
         "macsim" => {
             let cfg = build_config(&args)?;

@@ -1,0 +1,276 @@
+//! Device-resident buffers: execute against `PjRtBuffer`s instead of host
+//! literals, so state tensors stop round-tripping through the host.
+//!
+//! The literal execute path ([`super::Executable::run`]) uploads every
+//! input and downloads every output each call — fine for batch data, but
+//! for parameters and momenta it is an O(model) host↔device round-trip per
+//! step that the AOT train modules make unnecessary: they are lowered with
+//! input-output aliasing (`donate_argnums` over the 2P state inputs, see
+//! `python/compile/aot.py`), so XLA may update the state **in place**.
+//! [`DeviceState`] holds the live parameter/momentum `PjRtBuffer`s,
+//! [`Executable::run_device`] executes against them, and the step's output
+//! buffers simply become the next step's inputs.  Host copies happen only
+//! on demand — checkpoint snapshot, rollback restore, fault-injection
+//! corruption, inspection — and every one of those state-tensor copies is
+//! counted by [`super::host_transfers`] (batch inputs and scalar stat
+//! readbacks are not; see the counter's docs for the exact semantics).
+//!
+//! All PJRT buffer FFI lives in this module on purpose: if a platform's
+//! `xla_extension` build behaves differently (e.g. returns the result as a
+//! single tuple buffer instead of per-output buffers), [`DeviceRun`]
+//! surfaces that as `Fetched` and the engine falls back to the literal
+//! path — degraded to the old transfer profile, never wrong.
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient};
+
+use super::{note_host_transfers, Executable};
+
+/// One device-resident tensor (a thin owner of a `PjRtBuffer`).
+pub struct DeviceBuf {
+    buf: PjRtBuffer,
+}
+
+impl DeviceBuf {
+    pub fn buffer(&self) -> &PjRtBuffer {
+        &self.buf
+    }
+
+    /// Wrap an executable-output buffer (no transfer involved).
+    pub fn from_output(buf: PjRtBuffer) -> DeviceBuf {
+        DeviceBuf { buf }
+    }
+
+    /// Upload a host literal as an *input-class* buffer (batch data,
+    /// scalars, the precision vector) — uncounted, like the host copies the
+    /// literal execute path performs internally.
+    pub fn from_literal(client: &PjRtClient, lit: &Literal) -> Result<DeviceBuf> {
+        let buf = client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow::anyhow!("uploading literal to device: {e}"))?;
+        Ok(DeviceBuf { buf })
+    }
+
+    /// Upload a *state* tensor (parameter/momentum) — counted against
+    /// [`super::host_transfers`].
+    pub fn from_state_literal(client: &PjRtClient, lit: &Literal) -> Result<DeviceBuf> {
+        note_host_transfers(1);
+        Self::from_literal(client, lit)
+    }
+
+    /// Download a *state* tensor back to the host — counted.
+    pub fn to_state_literal(&self) -> Result<Literal> {
+        note_host_transfers(1);
+        self.buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("downloading device buffer: {e}"))
+    }
+}
+
+/// What [`Executable::run_device`] hands back.
+pub enum DeviceRun {
+    /// Per-output device buffers, in `spec.outputs` order — the state
+    /// outputs can be fed straight into the next execution.
+    Resident(Vec<PjRtBuffer>),
+    /// This PJRT build returned one tuple buffer instead of per-output
+    /// buffers; the tuple was fetched and untupled on the host.  Callers
+    /// should treat this as "device residency unsupported" and fall back
+    /// to the literal path.
+    Fetched(Vec<Literal>),
+}
+
+impl Executable {
+    /// Execute with positional *device buffer* inputs (order =
+    /// `spec.inputs`).  Validates arity on both sides.
+    ///
+    /// Inputs declared donated at lowering time (the train modules' 2P
+    /// state tensors) must not be reused after this call — take the
+    /// corresponding output buffers instead.
+    pub fn run_device(&self, inputs: &[&PjRtBuffer]) -> Result<DeviceRun> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "module {}: got {} device inputs, expected {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let mut bufs = self
+            .exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {} (device): {e}", self.spec.name))?;
+        anyhow::ensure!(!bufs.is_empty(), "module {}: no result", self.spec.name);
+        let dev0 = bufs.swap_remove(0);
+        if dev0.len() == self.spec.outputs.len() {
+            return Ok(DeviceRun::Resident(dev0));
+        }
+        // Single tuple result: this build does not untuple on device.
+        anyhow::ensure!(
+            dev0.len() == 1,
+            "module {}: got {} result buffers, expected {} (or 1 tuple)",
+            self.spec.name,
+            dev0.len(),
+            self.spec.outputs.len()
+        );
+        let tuple = dev0[0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching tuple result of {}", self.spec.name))?;
+        let outs = tuple.to_tuple().context("untupling device result")?;
+        anyhow::ensure!(
+            outs.len() == self.spec.outputs.len(),
+            "module {}: got {} outputs, expected {}",
+            self.spec.name,
+            outs.len(),
+            self.spec.outputs.len()
+        );
+        Ok(DeviceRun::Fetched(outs))
+    }
+}
+
+/// The live parameter/momentum buffers of one training run.
+pub struct DeviceState {
+    params: Vec<DeviceBuf>,
+    mom: Vec<DeviceBuf>,
+}
+
+impl DeviceState {
+    /// Upload host state (counted: `2 * n_params` transfers).
+    pub fn upload(client: &PjRtClient, params: &[Literal], mom: &[Literal]) -> Result<DeviceState> {
+        anyhow::ensure!(
+            params.len() == mom.len(),
+            "device state: {} params vs {} momenta",
+            params.len(),
+            mom.len()
+        );
+        let up = |lits: &[Literal]| -> Result<Vec<DeviceBuf>> {
+            lits.iter()
+                .map(|l| DeviceBuf::from_state_literal(client, l))
+                .collect()
+        };
+        Ok(DeviceState { params: up(params)?, mom: up(mom)? })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Parameter buffers only (the eval module's state inputs).
+    pub fn param_buffers(&self) -> impl Iterator<Item = &PjRtBuffer> {
+        self.params.iter().map(|b| b.buffer())
+    }
+
+    /// All state buffers in train-module input order: params then momenta.
+    pub fn input_buffers(&self) -> impl Iterator<Item = &PjRtBuffer> {
+        self.params
+            .iter()
+            .chain(self.mom.iter())
+            .map(|b| b.buffer())
+    }
+
+    /// Adopt a step's output buffers as the new state (no transfer — this
+    /// is the whole point: outputs stay on device).
+    pub fn replace(&mut self, params: Vec<PjRtBuffer>, mom: Vec<PjRtBuffer>) {
+        assert_eq!(params.len(), self.params.len());
+        assert_eq!(mom.len(), self.mom.len());
+        self.params = params.into_iter().map(DeviceBuf::from_output).collect();
+        self.mom = mom.into_iter().map(DeviceBuf::from_output).collect();
+    }
+
+    /// Download the full state to host literals (counted: `2 * n_params`) —
+    /// checkpoint save, rollback snapshot, inspection.
+    pub fn snapshot(&self) -> Result<(Vec<Literal>, Vec<Literal>)> {
+        let down = |bufs: &[DeviceBuf]| -> Result<Vec<Literal>> {
+            bufs.iter().map(|b| b.to_state_literal()).collect()
+        };
+        Ok((down(&self.params)?, down(&self.mom)?))
+    }
+
+    /// Download one tensor (counted) — fault-injection reads.
+    pub fn download(&self, mom: bool, idx: usize) -> Result<Literal> {
+        let store = if mom { &self.mom } else { &self.params };
+        store[idx].to_state_literal()
+    }
+
+    /// Overwrite one tensor from a host literal (counted) — fault-injection
+    /// writes.
+    pub fn set(
+        &mut self,
+        client: &PjRtClient,
+        mom: bool,
+        idx: usize,
+        lit: &Literal,
+    ) -> Result<()> {
+        let store = if mom { &mut self.mom } else { &mut self.params };
+        store[idx] = DeviceBuf::from_state_literal(client, lit)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{host_transfers, literal_f32, to_vec_f32};
+
+    fn client() -> PjRtClient {
+        PjRtClient::cpu().expect("PJRT CPU client")
+    }
+
+    #[test]
+    fn state_upload_download_roundtrip_is_counted() {
+        let c = client();
+        let lit = literal_f32(&[1.0, -2.0, 3.5, 0.25], &[2, 2]).unwrap();
+        let before = host_transfers();
+        let buf = DeviceBuf::from_state_literal(&c, &lit).unwrap();
+        assert_eq!(host_transfers(), before + 1, "upload counts once");
+        let back = buf.to_state_literal().unwrap();
+        assert_eq!(host_transfers(), before + 2, "download counts once");
+        assert_eq!(to_vec_f32(&back).unwrap(), vec![1.0, -2.0, 3.5, 0.25]);
+    }
+
+    #[test]
+    fn input_uploads_are_not_counted() {
+        let c = client();
+        let lit = literal_f32(&[7.0; 8], &[8]).unwrap();
+        let before = host_transfers();
+        let _buf = DeviceBuf::from_literal(&c, &lit).unwrap();
+        assert_eq!(host_transfers(), before, "batch-class uploads are free");
+    }
+
+    #[test]
+    fn device_state_snapshot_matches_upload() {
+        let c = client();
+        let params = vec![
+            literal_f32(&[1.0, 2.0], &[2]).unwrap(),
+            literal_f32(&[3.0], &[1]).unwrap(),
+        ];
+        let mom = vec![
+            literal_f32(&[0.0, 0.5], &[2]).unwrap(),
+            literal_f32(&[-1.0], &[1]).unwrap(),
+        ];
+        let before = host_transfers();
+        let ds = DeviceState::upload(&c, &params, &mom).unwrap();
+        assert_eq!(host_transfers(), before + 4);
+        assert_eq!(ds.n_params(), 2);
+        let (p2, m2) = ds.snapshot().unwrap();
+        assert_eq!(host_transfers(), before + 8);
+        for (a, b) in params.iter().zip(&p2) {
+            assert_eq!(to_vec_f32(a).unwrap(), to_vec_f32(b).unwrap());
+        }
+        for (a, b) in mom.iter().zip(&m2) {
+            assert_eq!(to_vec_f32(a).unwrap(), to_vec_f32(b).unwrap());
+        }
+    }
+
+    #[test]
+    fn set_and_download_one_tensor() {
+        let c = client();
+        let params = vec![literal_f32(&[1.0, 2.0], &[2]).unwrap()];
+        let mom = vec![literal_f32(&[0.0, 0.0], &[2]).unwrap()];
+        let mut ds = DeviceState::upload(&c, &params, &mom).unwrap();
+        let patched = literal_f32(&[9.0, 2.0], &[2]).unwrap();
+        ds.set(&c, false, 0, &patched).unwrap();
+        let back = ds.download(false, 0).unwrap();
+        assert_eq!(to_vec_f32(&back).unwrap(), vec![9.0, 2.0]);
+        let m = ds.download(true, 0).unwrap();
+        assert_eq!(to_vec_f32(&m).unwrap(), vec![0.0, 0.0]);
+    }
+}

@@ -76,6 +76,9 @@ pub struct ModuleSpec {
     pub batch: usize,
     pub quantized: bool,
     pub stochastic: bool,
+    /// Lowered with `donate_argnums` over the state inputs, so XLA may
+    /// alias parameters/momenta in place on the device-buffer path.
+    pub donated: bool,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
     pub sites: Vec<SiteSpec>,
@@ -180,6 +183,7 @@ impl Manifest {
                     batch: m.get("batch").as_usize().unwrap_or(0),
                     quantized: m.get("quantized").as_bool().unwrap_or(false),
                     stochastic: m.get("stochastic").as_bool().unwrap_or(false),
+                    donated: m.get("donated").as_bool().unwrap_or(false),
                     inputs: parse_tensors("inputs")?,
                     outputs: parse_tensors("outputs")?,
                     sites,
@@ -257,6 +261,18 @@ impl Manifest {
             format!("{model}_eval_float")
         }
     }
+
+    /// Do this model's eval modules emit per-example outputs (`loss_vec` /
+    /// `correct_vec`)?  Newer artifacts do, which lets the engine mask pad
+    /// entries exactly on non-multiple test sets; legacy artifacts emit
+    /// whole-batch scalars and keep the approximate tail path.
+    pub fn eval_per_example(&self, model: &str) -> bool {
+        [true, false].iter().any(|&q| {
+            self.modules
+                .get(&Self::eval_module_name(model, q))
+                .is_some_and(|m| m.outputs.iter().any(|t| t.name == "loss_vec"))
+        })
+    }
 }
 
 #[cfg(test)]
@@ -290,6 +306,22 @@ mod tests {
         assert_eq!(spec.site_indices(Class::Grad), vec![1]);
         let meta = m.model("mlp").unwrap();
         assert_eq!(meta.param_count(), 784 * 256 + 256);
+    }
+
+    #[test]
+    fn eval_per_example_detection() {
+        let mini = Manifest::parse(MINI).unwrap();
+        assert!(!mini.eval_per_example("mlp"), "no eval module at all");
+        let with_vec = r#"{
+          "models": {"mlp": {"input_shape": [784], "params": []}},
+          "modules": {"mlp_eval": {
+            "kind": "eval", "model": "mlp", "batch": 100, "file": "e.hlo.txt",
+            "inputs": [], "donated": false,
+            "outputs": [{"name": "loss_vec", "shape": [100], "dtype": "f32"},
+                        {"name": "correct_vec", "shape": [100], "dtype": "f32"}]}}}"#;
+        let m = Manifest::parse(with_vec).unwrap();
+        assert!(m.eval_per_example("mlp"));
+        assert!(!m.module("mlp_eval").unwrap().donated);
     }
 
     #[test]

@@ -6,8 +6,14 @@
 //! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos).
 //!
 //! Executables are cached per module name, so a training run compiles its
-//! step exactly once and the hot loop is `execute` + host copies only.
+//! step exactly once.  On top of the host-literal path, [`device`] keeps
+//! *state* tensors (parameters/momenta) resident on the device between
+//! executions: [`Executable::run_device`] consumes `PjRtBuffer`s and the
+//! step's output buffers become the next step's inputs, so the steady-state
+//! hot loop performs **zero** host↔device parameter transfers
+//! ([`host_transfers`] counts them, mirroring [`literal_builds`]).
 
+pub mod device;
 pub mod manifest;
 pub mod pinned;
 
@@ -19,6 +25,7 @@ use std::rc::Rc;
 use anyhow::{Context, Result};
 use xla::{FromRawBytes, Literal, PjRtClient, PjRtLoadedExecutable};
 
+pub use device::{DeviceBuf, DeviceRun, DeviceState};
 pub use manifest::{DType, Manifest, ModelMeta, ModuleSpec, TensorSpec};
 pub use pinned::{PinnedF32, PinnedI32};
 
@@ -43,6 +50,33 @@ pub fn literal_builds() -> u64 {
 
 fn count_literal_build() {
     LITERAL_BUILDS.with(|c| c.set(c.get() + 1));
+}
+
+thread_local! {
+    /// How many *state-tensor* host↔device transfers this thread has
+    /// performed (see [`host_transfers`]).
+    static HOST_TRANSFERS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Running count of parameter/momentum **state-tensor** transfers between
+/// host and device on this thread, in tensors (one upload or one download
+/// of one tensor = one count).
+///
+/// Per-step *batch* inputs (x/y/lr/seed/prec) and scalar stat readbacks are
+/// intentionally uncounted — they are O(batch) traffic every step path must
+/// pay.  What this counter isolates is the O(model) round-trip the
+/// device-resident path ([`device::DeviceState`]) removes: a donated step
+/// adds **zero**, the literal fallback adds `4 * n_params` (2P up + 2P
+/// down), and snapshot/restore/reinit/corrupt operations count their
+/// on-demand copies.  `repro bench step`, `benches/bench_step.rs`, and the
+/// integration tests snapshot it around the hot loop, exactly like
+/// [`literal_builds`].
+pub fn host_transfers() -> u64 {
+    HOST_TRANSFERS.with(|c| c.get())
+}
+
+pub(crate) fn note_host_transfers(n: u64) {
+    HOST_TRANSFERS.with(|c| c.set(c.get() + n));
 }
 
 /// A compiled module plus its manifest spec.
@@ -275,6 +309,14 @@ pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))
 }
 
+/// Deep-copy an f32 literal (the xla crate's `Literal` has no `Clone`);
+/// counts as a literal build, not a host transfer.
+pub fn clone_literal_f32(lit: &Literal) -> Result<Literal> {
+    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    literal_f32(&to_vec_f32(lit)?, &dims)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,5 +339,24 @@ mod tests {
         literal_f32(&[1.0], &[]).unwrap();
         literal_i32(&[1, 2, 3], &[3]).unwrap();
         assert_eq!(literal_builds(), before + 2);
+    }
+
+    #[test]
+    fn clone_preserves_shape_and_payload() {
+        let l = literal_f32(&[1.0, -2.5, 3.0, 4.0, 5.0, 6.0], &[3, 2]).unwrap();
+        let tx_before = host_transfers();
+        let c = clone_literal_f32(&l).unwrap();
+        assert_eq!(to_vec_f32(&c).unwrap(), to_vec_f32(&l).unwrap());
+        let (a, b) = (l.array_shape().unwrap(), c.array_shape().unwrap());
+        assert_eq!(a.dims(), b.dims());
+        assert_eq!(host_transfers(), tx_before, "clone is host-side only");
+    }
+
+    #[test]
+    fn host_transfer_notes_accumulate() {
+        let before = host_transfers();
+        note_host_transfers(3);
+        note_host_transfers(1);
+        assert_eq!(host_transfers(), before + 4);
     }
 }

@@ -106,13 +106,15 @@ pub struct CheckpointMeta {
 /// Checkpoint a trainer's current state (convenience wrapper over
 /// [`save_state`]).
 pub fn save(dir: &str, trainer: &Trainer, iter: u64) -> Result<()> {
+    // with device-resident state this is the on-demand host download
+    let (params, mom) = trainer.snapshot()?;
     save_state(
         dir,
         &trainer.cfg.model,
         trainer.policy.name(),
         trainer.prec,
-        trainer.params(),
-        trainer.mom(),
+        &params,
+        &mom,
         iter,
     )
 }
@@ -297,7 +299,7 @@ pub fn load_latest(dir: &str, trainer: &mut Trainer) -> Result<u64> {
         meta.model,
         trainer.cfg.model
     );
-    trainer.restore(params, mom, meta.prec);
+    trainer.restore(params, mom, meta.prec)?;
     Ok(iter + 1)
 }
 

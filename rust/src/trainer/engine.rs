@@ -1,15 +1,32 @@
 //! [`StepEngine`]: the compiled-executable hot path, and nothing else.
 //!
 //! The engine owns what one training run needs to *execute*: the train and
-//! eval [`Executable`]s, the live parameter/momentum literals, the host
-//! batch buffers, and — the point of this layer — a set of **pre-pinned
-//! input literals** ([`PinnedF32`]/[`PinnedI32`]) for batch x/y, the
-//! learning rate, the stochastic-rounding seed, and the `<IL,FL>` precision
-//! triple.  All of them are allocated once at construction and refilled in
-//! place each call, so [`StepEngine::step`] constructs **zero** literals
-//! per iteration (the precision literal is refilled only when the policy
-//! actually moves).  `repro bench step` and the integration tests verify
-//! this via [`crate::runtime::literal_builds`].
+//! eval [`Executable`]s, the live parameter/momentum state, the host batch
+//! buffers, and a set of **pre-pinned input literals**
+//! ([`PinnedF32`]/[`PinnedI32`]) for batch x/y, the learning rate, the
+//! stochastic-rounding seed, and the `<IL,FL>` precision triple — all
+//! allocated once at construction and refilled in place each call, so
+//! [`StepEngine::step`] constructs **zero** literals per iteration
+//! ([`crate::runtime::literal_builds`] proves it).
+//!
+//! Parameter/momentum state lives in one of two modes ([`ParamState`]):
+//!
+//! - **Device** (default, `runtime.device_params = true`): the state stays
+//!   resident as `PjRtBuffer`s ([`crate::runtime::DeviceState`]); each step
+//!   executes via [`Executable::run_device`] and adopts its output buffers
+//!   as the next step's inputs, so the steady-state loop performs **zero**
+//!   host↔device state transfers ([`crate::runtime::host_transfers`] stays
+//!   flat).  The train modules are lowered with `donate_argnums` over the
+//!   state inputs, letting XLA alias the update in place.
+//! - **Host** (fallback): the pre-device literal path — state uploads and
+//!   downloads every step (`4 * n_params` counted transfers).  Selected by
+//!   config, by a failed device upload, or automatically mid-run if the
+//!   PJRT build returns tuple results ([`crate::runtime::DeviceRun`]
+//!   `::Fetched`) — degraded transfer profile, identical numerics.
+//!
+//! Host copies of state happen only on demand: [`StepEngine::snapshot`]
+//! (checkpoints, rollback), [`StepEngine::restore`]/`reinit`, and
+//! fault-injection corruption.
 //!
 //! Policy decisions, history, and recovery live above this layer (the
 //! [`super::Trainer`] facade and [`super::Session`]); the engine neither
@@ -17,13 +34,16 @@
 //! handed and reports raw per-class `(E, R)` aggregates back.
 
 use anyhow::{Context, Result};
-use xla::Literal;
+use xla::{Literal, PjRtBuffer, PjRtClient};
 
 use crate::config::ExperimentConfig;
 use crate::data::{batcher::EvalBatcher, Batcher, Dataset};
 use crate::policy::{AggMode, Class, PrecState, Rounding};
 use crate::resilience::FaultInjector;
-use crate::runtime::{literal_f32, Executable, PinnedF32, PinnedI32, Runtime};
+use crate::runtime::{
+    clone_literal_f32, literal_f32, to_vec_f32, DeviceBuf, DeviceRun, DeviceState, Executable,
+    PinnedF32, PinnedI32, Runtime,
+};
 
 /// What one executed step reports: scalars plus per-class `(E, R)`
 /// aggregates, in `[weights, acts, grads]` order.
@@ -35,15 +55,91 @@ pub struct RawStep {
     pub r: [f32; 3],
 }
 
+/// Where the parameter/momentum state lives between steps.
+enum ParamState {
+    /// Host literals, re-uploaded every execution (legacy / fallback path).
+    Host { params: Vec<Literal>, mom: Vec<Literal> },
+    /// Device-resident buffers; step outputs become the next step's inputs.
+    Device(DeviceState),
+}
+
+/// One step's raw execution result, before state is written back.
+enum StepExec {
+    /// Per-output device buffers (state stays resident).
+    DeviceOut(Vec<PjRtBuffer>),
+    /// Host literals; `fallback` means a device-mode execution came back as
+    /// a fetched tuple, so the engine must drop to host mode.
+    HostOut { outs: Vec<Literal>, fallback: bool },
+}
+
+/// Exact streaming eval accumulator.
+///
+/// Per-example losses and correctness flags are summed **sequentially in
+/// `f64`, in dataset order**, so the final `(mean loss, accuracy)` is
+/// bit-identical for every eval batch size — a 25-example set scored at
+/// batch 10 adds examples 0..10, 10..20, 20..25 in exactly the order a
+/// batch-1 loop would.  [`EvalAccum::add_batch_sums`] is the legacy
+/// whole-batch path for scalar artifacts (approximate on wrapped tails).
+#[derive(Debug, Default, Clone)]
+pub struct EvalAccum {
+    loss_sum: f64,
+    correct_sum: f64,
+    total: usize,
+}
+
+impl EvalAccum {
+    pub fn new() -> EvalAccum {
+        EvalAccum::default()
+    }
+
+    /// Add per-example results (pad entries already sliced off by the
+    /// caller: pass only the first `valid` of each batch).
+    pub fn add_examples(&mut self, losses: &[f32], correct: &[f32]) {
+        debug_assert_eq!(losses.len(), correct.len());
+        for (&l, &c) in losses.iter().zip(correct) {
+            self.loss_sum += l as f64;
+            self.correct_sum += c as f64;
+        }
+        self.total += losses.len();
+    }
+
+    /// Legacy scalar-artifact path: whole-batch sums rescaled by
+    /// `valid/batch`.  Exact only when `valid == batch`; wrapped pad
+    /// entries otherwise still contribute to the batch sums.
+    pub fn add_batch_sums(&mut self, loss_sum: f32, correct: f32, valid: usize, batch: usize) {
+        let scale = valid as f64 / batch.max(1) as f64;
+        self.loss_sum += loss_sum as f64 * scale;
+        self.correct_sum += correct as f64 * scale;
+        self.total += valid;
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// `(mean loss, accuracy)` over everything accumulated.
+    pub fn finish(&self) -> (f32, f32) {
+        let n = self.total.max(1) as f64;
+        ((self.loss_sum / n) as f32, (self.correct_sum / n) as f32)
+    }
+}
+
 /// Compiled executables + parameter state + pre-pinned input literals.
 pub struct StepEngine {
     model: String,
     agg: AggMode,
+    client: PjRtClient,
     exe_train: std::rc::Rc<Executable>,
     exe_eval: std::rc::Rc<Executable>,
-    params: Vec<Literal>,
-    mom: Vec<Literal>,
+    state: ParamState,
     n_params: usize,
+    /// Manifest shapes of each parameter tensor (momenta are identical) —
+    /// device mode has no host literals to read shapes from.
+    param_shapes: Vec<Vec<usize>>,
+    param_sizes: Vec<usize>,
+    /// Eval module emits per-example `loss_vec`/`correct_vec` (exact tail
+    /// masking) rather than legacy whole-batch scalars.
+    eval_per_example: bool,
     x_shape: Vec<usize>,
     eval_x_shape: Vec<usize>,
     // reusable host-side batch buffers
@@ -63,6 +159,9 @@ pub struct StepEngine {
     /// refilled when the policy moves.  NaN-seeded so the first sync always
     /// writes.
     prec_cache: [f32; 6],
+    /// Device copy of `prec_in`, re-uploaded only when the triple moves
+    /// (cleared by `sync_prec`).  `None` in host mode.
+    prec_dev: Option<DeviceBuf>,
     /// Indices of each class's slots in the stat vectors.
     site_idx: [Vec<usize>; 3],
     evec_len: usize,
@@ -86,6 +185,15 @@ impl StepEngine {
         let params = rt.load_params(&cfg.model)?;
         let mom = rt.zeros_like_params(&cfg.model)?;
         let n_params = params.len();
+        let param_shapes: Vec<Vec<usize>> = rt
+            .manifest
+            .model(&cfg.model)?
+            .params
+            .iter()
+            .map(|p| p.shape.clone())
+            .collect();
+        let param_sizes: Vec<usize> =
+            param_shapes.iter().map(|s| s.iter().product()).collect();
 
         let spec = &exe_train.spec;
         let x_spec = &spec.inputs[spec.input_index("x")?];
@@ -94,6 +202,30 @@ impl StepEngine {
         let espec = &exe_eval.spec;
         let eval_x_shape = espec.inputs[espec.input_index("x")?].shape.clone();
         let eval_batch = eval_x_shape[0];
+        let eval_per_example = espec.outputs.iter().any(|t| t.name == "loss_vec");
+
+        let client = rt.client.clone();
+        let state = if cfg.device_params {
+            match DeviceState::upload(&client, &params, &mom) {
+                Ok(ds) => {
+                    crate::log_debug!(
+                        "engine: {train_name} state device-resident ({} tensors, donated={})",
+                        2 * n_params,
+                        spec.donated
+                    );
+                    ParamState::Device(ds)
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "engine: device-resident state unavailable ({e}); \
+                         falling back to host literals"
+                    );
+                    ParamState::Host { params, mom }
+                }
+            }
+        } else {
+            ParamState::Host { params, mom }
+        };
 
         let site_idx = [
             spec.site_indices(Class::Weight),
@@ -115,13 +247,17 @@ impl StepEngine {
             ex_in: PinnedF32::zeros(&eval_x_shape)?,
             ey_in: PinnedI32::zeros(&[eval_batch])?,
             prec_cache: [f32::NAN; 6],
+            prec_dev: None,
             model: cfg.model.clone(),
             agg: cfg.agg,
+            client,
             exe_train,
             exe_eval,
-            params,
-            mom,
+            state,
             n_params,
+            param_shapes,
+            param_sizes,
+            eval_per_example,
             x_shape,
             eval_x_shape,
             site_idx,
@@ -137,12 +273,32 @@ impl StepEngine {
         self.eval_x_shape[0]
     }
 
+    /// Is the parameter/momentum state device-resident right now?
+    pub fn device_resident(&self) -> bool {
+        matches!(self.state, ParamState::Device(_))
+    }
+
+    /// Does eval mask pad entries exactly (per-example artifacts)?
+    pub fn eval_exact(&self) -> bool {
+        self.eval_per_example
+    }
+
     /// Refill the shared precision literal iff the triple changed.
     fn sync_prec(&mut self, prec: &PrecState) -> Result<()> {
         let pv = prec.to_vec();
         if pv != self.prec_cache {
             self.prec_in.fill(&pv)?;
             self.prec_cache = pv;
+            self.prec_dev = None; // device copy is stale
+        }
+        Ok(())
+    }
+
+    /// Make sure the device copy of the precision vector is current
+    /// (no-op in host mode; re-uploads only after `sync_prec` moved it).
+    fn ensure_prec_dev(&mut self) -> Result<()> {
+        if matches!(self.state, ParamState::Device(_)) && self.prec_dev.is_none() {
+            self.prec_dev = Some(DeviceBuf::from_literal(&self.client, self.prec_in.literal())?);
         }
         Ok(())
     }
@@ -160,41 +316,116 @@ impl StepEngine {
     }
 
     /// Run one training iteration from the pre-filled batch buffers at the
-    /// given learning rate and precision.  Zero literal construction: every
-    /// input is a refilled pinned literal.
+    /// given learning rate and precision.  Zero literal construction, and —
+    /// in device mode — zero state transfers: last step's output buffers
+    /// are this step's inputs.
     pub fn step(&mut self, iter: u64, lr: f32, prec: &PrecState) -> Result<RawStep> {
         self.x_in.fill(&self.x_buf)?;
         self.y_in.fill(&self.y_buf)?;
         self.lr_in.set_scalar(lr)?;
         self.seed_in.set_scalar((iter + 1) as f32)?;
         self.sync_prec(prec)?;
+        self.ensure_prec_dev()?;
 
-        let mut inputs: Vec<&Literal> = Vec::with_capacity(2 * self.n_params + 5);
-        inputs.extend(self.params.iter());
-        inputs.extend(self.mom.iter());
-        inputs.push(self.x_in.literal());
-        inputs.push(self.y_in.literal());
-        inputs.push(self.lr_in.literal());
-        inputs.push(self.seed_in.literal());
-        inputs.push(self.prec_in.literal());
+        let exec = match &self.state {
+            ParamState::Device(ds) => {
+                let x = DeviceBuf::from_literal(&self.client, self.x_in.literal())?;
+                let y = DeviceBuf::from_literal(&self.client, self.y_in.literal())?;
+                let lr_b = DeviceBuf::from_literal(&self.client, self.lr_in.literal())?;
+                let seed = DeviceBuf::from_literal(&self.client, self.seed_in.literal())?;
+                let prec_b = self.prec_dev.as_ref().expect("prec_dev ensured above");
+                let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(2 * self.n_params + 5);
+                inputs.extend(ds.input_buffers());
+                inputs.push(x.buffer());
+                inputs.push(y.buffer());
+                inputs.push(lr_b.buffer());
+                inputs.push(seed.buffer());
+                inputs.push(prec_b.buffer());
+                match self
+                    .exe_train
+                    .run_device(&inputs)
+                    .with_context(|| format!("train step {iter}"))?
+                {
+                    DeviceRun::Resident(bufs) => StepExec::DeviceOut(bufs),
+                    DeviceRun::Fetched(outs) => {
+                        // state came back as host literals: 2P downloads
+                        crate::runtime::note_host_transfers(2 * self.n_params as u64);
+                        StepExec::HostOut { outs, fallback: true }
+                    }
+                }
+            }
+            ParamState::Host { params, mom } => {
+                // literal path: 2P uploads inside execute + 2P downloads
+                crate::runtime::note_host_transfers(4 * self.n_params as u64);
+                let mut inputs: Vec<&Literal> = Vec::with_capacity(2 * self.n_params + 5);
+                inputs.extend(params.iter());
+                inputs.extend(mom.iter());
+                inputs.push(self.x_in.literal());
+                inputs.push(self.y_in.literal());
+                inputs.push(self.lr_in.literal());
+                inputs.push(self.seed_in.literal());
+                inputs.push(self.prec_in.literal());
+                let outs = self
+                    .exe_train
+                    .run(&inputs)
+                    .with_context(|| format!("train step {iter}"))?;
+                StepExec::HostOut { outs, fallback: false }
+            }
+        };
 
-        let bufs = self
-            .exe_train
-            .run(&inputs)
-            .with_context(|| format!("train step {iter}"))?;
-        let mut outs = bufs.into_iter();
-        let new_params: Vec<Literal> = (&mut outs).take(self.n_params).collect();
-        let new_mom: Vec<Literal> = (&mut outs).take(self.n_params).collect();
-        let rest: Vec<Literal> = outs.collect();
-        anyhow::ensure!(rest.len() == 4, "train step output arity");
-        let loss = rest[0].get_first_element::<f32>()?;
-        let acc = rest[1].get_first_element::<f32>()?;
-        let evec = crate::runtime::to_vec_f32(&rest[2])?;
-        let rvec = crate::runtime::to_vec_f32(&rest[3])?;
+        let (loss, acc, evec, rvec) = match exec {
+            StepExec::DeviceOut(mut bufs) => {
+                anyhow::ensure!(
+                    bufs.len() == 2 * self.n_params + 4,
+                    "train step output arity"
+                );
+                let stats = bufs.split_off(2 * self.n_params);
+                let new_mom = bufs.split_off(self.n_params);
+                let new_params = bufs;
+                // scalar/stat readbacks are O(sites), not state transfers
+                let fetch = |b: &PjRtBuffer| -> Result<Literal> {
+                    b.to_literal_sync().map_err(|e| anyhow::anyhow!("{e}"))
+                };
+                let loss = fetch(&stats[0])?.get_first_element::<f32>()?;
+                let acc = fetch(&stats[1])?.get_first_element::<f32>()?;
+                let evec = to_vec_f32(&fetch(&stats[2])?)?;
+                let rvec = to_vec_f32(&fetch(&stats[3])?)?;
+                match &mut self.state {
+                    ParamState::Device(ds) => ds.replace(new_params, new_mom),
+                    ParamState::Host { .. } => unreachable!("device outputs in host mode"),
+                }
+                (loss, acc, evec, rvec)
+            }
+            StepExec::HostOut { outs, fallback } => {
+                let mut it = outs.into_iter();
+                let new_params: Vec<Literal> = (&mut it).take(self.n_params).collect();
+                let new_mom: Vec<Literal> = (&mut it).take(self.n_params).collect();
+                let rest: Vec<Literal> = it.collect();
+                anyhow::ensure!(rest.len() == 4, "train step output arity");
+                let loss = rest[0].get_first_element::<f32>()?;
+                let acc = rest[1].get_first_element::<f32>()?;
+                let evec = to_vec_f32(&rest[2])?;
+                let rvec = to_vec_f32(&rest[3])?;
+                if fallback {
+                    crate::log_warn!(
+                        "engine: PJRT returned a fetched tuple at step {iter}; \
+                         dropping to host-literal state (numerics unchanged)"
+                    );
+                    self.prec_dev = None;
+                    self.state = ParamState::Host { params: new_params, mom: new_mom };
+                } else {
+                    match &mut self.state {
+                        ParamState::Host { params, mom } => {
+                            *params = new_params;
+                            *mom = new_mom;
+                        }
+                        ParamState::Device(_) => unreachable!("host outputs in device mode"),
+                    }
+                }
+                (loss, acc, evec, rvec)
+            }
+        };
         anyhow::ensure!(evec.len() == self.evec_len, "evec length");
-
-        self.params = new_params;
-        self.mom = new_mom;
 
         Ok(RawStep {
             loss,
@@ -212,83 +443,150 @@ impl StepEngine {
         })
     }
 
+    /// Execute the eval module on the current `ex`/`ey`/`prec` pins against
+    /// whichever state mode is live; returns host output literals.
+    fn run_eval(&mut self) -> Result<Vec<Literal>> {
+        self.ensure_prec_dev()?;
+        match &self.state {
+            ParamState::Device(ds) => {
+                let ex = DeviceBuf::from_literal(&self.client, self.ex_in.literal())?;
+                let ey = DeviceBuf::from_literal(&self.client, self.ey_in.literal())?;
+                let prec_b = self.prec_dev.as_ref().expect("prec_dev ensured above");
+                let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(self.n_params + 3);
+                inputs.extend(ds.param_buffers());
+                inputs.push(ex.buffer());
+                inputs.push(ey.buffer());
+                inputs.push(prec_b.buffer());
+                match self.exe_eval.run_device(&inputs)? {
+                    DeviceRun::Resident(bufs) => bufs
+                        .iter()
+                        .map(|b| b.to_literal_sync().map_err(|e| anyhow::anyhow!("{e}")))
+                        .collect(),
+                    DeviceRun::Fetched(outs) => Ok(outs),
+                }
+            }
+            ParamState::Host { params, .. } => {
+                // literal path re-uploads all P parameters per eval batch
+                crate::runtime::note_host_transfers(self.n_params as u64);
+                let mut inputs: Vec<&Literal> = Vec::with_capacity(self.n_params + 3);
+                inputs.extend(params.iter());
+                inputs.push(self.ex_in.literal());
+                inputs.push(self.ey_in.literal());
+                inputs.push(self.prec_in.literal());
+                self.exe_eval.run(&inputs)
+            }
+        }
+    }
+
     /// Evaluate on a full dataset at the given precision; returns
     /// (mean loss, accuracy).
+    ///
+    /// With per-example eval artifacts the tail batch is masked exactly:
+    /// only the first `valid` outputs of each batch are accumulated, so a
+    /// test set that is not a multiple of the eval batch scores identically
+    /// to a batch-size-1 reference (see [`EvalAccum`]).  Legacy scalar
+    /// artifacts fall back to the old `valid/batch` rescale and warn once.
     pub fn evaluate(&mut self, test: &Dataset, prec: &PrecState) -> Result<(f32, f32)> {
         let batch = self.eval_batch_size();
         self.sync_prec(prec)?;
         let mut eb = EvalBatcher::new(test, batch);
-        let mut loss_sum = 0.0f64;
-        let mut correct = 0.0f64;
-        let mut total = 0usize;
+        let mut acc = EvalAccum::new();
+        let mut warned = false;
         while let Some(valid) = eb.next_into(&mut self.ex_buf, &mut self.ey_buf) {
-            // keep shapes static; the generator sizes test sets to a
-            // multiple of the eval batch, so valid == batch in practice.
             self.ex_in.fill(&self.ex_buf)?;
             self.ey_in.fill(&self.ey_buf)?;
-            let mut inputs: Vec<&Literal> = Vec::with_capacity(self.n_params + 3);
-            inputs.extend(self.params.iter());
-            inputs.push(self.ex_in.literal());
-            inputs.push(self.ey_in.literal());
-            inputs.push(self.prec_in.literal());
-            let outs = self.exe_eval.run(&inputs)?;
-            let scale = valid as f64 / batch as f64;
-            loss_sum += outs[0].get_first_element::<f32>()? as f64 * scale;
-            correct += outs[1].get_first_element::<f32>()? as f64 * scale;
-            total += valid;
+            let outs = self.run_eval()?;
+            if self.eval_per_example {
+                let lv = to_vec_f32(&outs[0])?;
+                let cv = to_vec_f32(&outs[1])?;
+                anyhow::ensure!(
+                    lv.len() == batch && cv.len() == batch,
+                    "per-example eval output arity"
+                );
+                acc.add_examples(&lv[..valid], &cv[..valid]);
+            } else {
+                if valid != batch && !warned {
+                    crate::log_warn!(
+                        "engine: scalar eval artifacts rescale the wrapped tail \
+                         ({valid}/{batch}) approximately; re-run `make artifacts` \
+                         for exact per-example eval"
+                    );
+                    warned = true;
+                }
+                acc.add_batch_sums(
+                    outs[0].get_first_element::<f32>()?,
+                    outs[1].get_first_element::<f32>()?,
+                    valid,
+                    batch,
+                );
+            }
         }
-        Ok((
-            (loss_sum / total.max(1) as f64) as f32,
-            (correct / total.max(1) as f64) as f32,
-        ))
+        Ok(acc.finish())
     }
 
-    /// Current parameters (for checkpointing / inspection).
-    pub fn params(&self) -> &[Literal] {
-        &self.params
+    /// Copy the current parameters and momenta to host literals
+    /// (checkpoint save, rollback snapshot, inspection).  Device mode
+    /// downloads `2 * n_params` counted transfers; host mode deep-copies.
+    pub fn snapshot(&self) -> Result<(Vec<Literal>, Vec<Literal>)> {
+        match &self.state {
+            ParamState::Host { params, mom } => {
+                let cp = |v: &[Literal]| -> Result<Vec<Literal>> {
+                    v.iter().map(clone_literal_f32).collect()
+                };
+                Ok((cp(params)?, cp(mom)?))
+            }
+            ParamState::Device(ds) => ds.snapshot(),
+        }
     }
 
-    pub fn mom(&self) -> &[Literal] {
-        &self.mom
-    }
-
-    /// Replace parameter/momentum state (checkpoint restore).
-    pub fn restore(&mut self, params: Vec<Literal>, mom: Vec<Literal>) {
-        assert_eq!(params.len(), self.n_params);
-        assert_eq!(mom.len(), self.n_params);
-        self.params = params;
-        self.mom = mom;
+    /// Replace parameter/momentum state (checkpoint restore).  Device mode
+    /// re-uploads the state (`2 * n_params` counted transfers).
+    pub fn restore(&mut self, params: Vec<Literal>, mom: Vec<Literal>) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == self.n_params && mom.len() == self.n_params,
+            "restore: state arity"
+        );
+        match &mut self.state {
+            ParamState::Host { params: p, mom: m } => {
+                *p = params;
+                *m = mom;
+            }
+            ParamState::Device(_) => {
+                self.state = ParamState::Device(DeviceState::upload(&self.client, &params, &mom)?);
+            }
+        }
+        Ok(())
     }
 
     /// Reset parameters and momentum to iteration-0 state.
     pub fn reinit(&mut self, rt: &mut Runtime) -> Result<()> {
-        self.params = rt.load_params(&self.model)?;
-        self.mom = rt.zeros_like_params(&self.model)?;
-        Ok(())
+        let params = rt.load_params(&self.model)?;
+        let mom = rt.zeros_like_params(&self.model)?;
+        self.restore(params, mom)
     }
 
     /// Flip one exponent bit in a stored tensor (fault injection):
     /// `Weight` corrupts a parameter, `Grad` corrupts a momentum slot.
     /// Returns a description of the corruption for the recovery log.
     pub fn corrupt_value(&mut self, class: Class, inj: &mut FaultInjector) -> Result<String> {
-        let store = match class {
-            Class::Grad => &mut self.mom,
-            _ => &mut self.params,
+        let is_mom = matches!(class, Class::Grad);
+        let (t, i, bit) = inj.flip_site(self.n_params, |k| self.param_sizes[k]);
+        let mut data = match &self.state {
+            ParamState::Host { params, mom } => {
+                to_vec_f32(&(if is_mom { mom } else { params })[t])?
+            }
+            ParamState::Device(ds) => to_vec_f32(&ds.download(is_mom, t)?)?,
         };
-        let mut sizes = Vec::with_capacity(store.len());
-        let mut shapes = Vec::with_capacity(store.len());
-        for lit in store.iter() {
-            let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e}"))?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            sizes.push(dims.iter().product::<usize>());
-            shapes.push(dims);
-        }
-        let (t, i, bit) = inj.flip_site(store.len(), |k| sizes[k]);
-        let mut data = crate::runtime::to_vec_f32(&store[t])?;
         let old = data[i];
         data[i] = f32::from_bits(old.to_bits() ^ (1u32 << bit));
         let new = data[i];
-        store[t] = literal_f32(&data, &shapes[t])?;
+        let lit = literal_f32(&data, &self.param_shapes[t])?;
+        match &mut self.state {
+            ParamState::Host { params, mom } => {
+                (if is_mom { mom } else { params })[t] = lit;
+            }
+            ParamState::Device(ds) => ds.set(&self.client, is_mom, t, &lit)?,
+        }
         Ok(format!(
             "flipped bit {bit} of {class:?} tensor {t} elem {i}: {old:e} -> {new:e}"
         ))
@@ -297,5 +595,69 @@ impl StepEngine {
     /// Fill the training batch buffers from a batcher.
     pub fn fill_batch(&mut self, b: &mut Batcher) {
         b.next_into(&mut self.x_buf, &mut self.y_buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_accum_batching_is_bit_identical() {
+        // 25 synthetic per-example scores, scored at batch 10 vs batch 1:
+        // the accumulator must produce bit-identical results.
+        let losses: Vec<f32> = (0..25).map(|i| 0.1 + (i as f32) * 0.013).collect();
+        let correct: Vec<f32> = (0..25).map(|i| (i % 3 == 0) as u32 as f32).collect();
+
+        let mut b1 = EvalAccum::new();
+        for i in 0..25 {
+            b1.add_examples(&losses[i..i + 1], &correct[i..i + 1]);
+        }
+        let mut b10 = EvalAccum::new();
+        for chunk in 0..3 {
+            let lo = chunk * 10;
+            let hi = (lo + 10).min(25);
+            b10.add_examples(&losses[lo..hi], &correct[lo..hi]);
+        }
+        assert_eq!(b1.total(), 25);
+        assert_eq!(b10.total(), 25);
+        let (l1, a1) = b1.finish();
+        let (l10, a10) = b10.finish();
+        assert_eq!(l1.to_bits(), l10.to_bits(), "loss must be bit-identical");
+        assert_eq!(a1.to_bits(), a10.to_bits(), "acc must be bit-identical");
+    }
+
+    #[test]
+    fn eval_accum_legacy_rescale_is_approximate() {
+        // The legacy path scales whole-batch sums by valid/batch: pad
+        // entries still leak in.  Contrast with the exact masked path.
+        let losses = [1.0f32, 2.0, 3.0, 4.0, 100.0]; // last entry is a pad
+        let correct = [1.0f32, 0.0, 1.0, 0.0, 1.0];
+        let valid = 4;
+        let batch = 5;
+
+        let mut exact = EvalAccum::new();
+        exact.add_examples(&losses[..valid], &correct[..valid]);
+        let (exact_loss, exact_acc) = exact.finish();
+        assert_eq!(exact_loss, 2.5);
+        assert_eq!(exact_acc, 0.5);
+
+        let mut legacy = EvalAccum::new();
+        let loss_sum: f32 = losses.iter().sum();
+        let correct_sum: f32 = correct.iter().sum();
+        legacy.add_batch_sums(loss_sum, correct_sum, valid, batch);
+        let (legacy_loss, legacy_acc) = legacy.finish();
+        assert!(
+            (legacy_loss - exact_loss).abs() > 1.0,
+            "pad contamination should be visible: {legacy_loss} vs {exact_loss}"
+        );
+        assert!(legacy_acc != exact_acc);
+    }
+
+    #[test]
+    fn eval_accum_empty_is_safe() {
+        let acc = EvalAccum::new();
+        assert_eq!(acc.total(), 0);
+        assert_eq!(acc.finish(), (0.0, 0.0));
     }
 }

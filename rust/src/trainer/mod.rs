@@ -3,9 +3,12 @@
 //! The monolithic trainer is split into three layers:
 //!
 //! - [`StepEngine`] (`engine`): the L3 hot path.  Owns the compiled PJRT
-//!   executables, parameter/momentum literals, host batch buffers, and
+//!   executables, the **device-resident** parameter/momentum buffers
+//!   (donated step inputs alias to outputs; host-literal fallback for
+//!   platforms without buffer support), host batch buffers, and
 //!   **pre-pinned input literals** refilled in place each call — one
-//!   training step performs zero per-iteration `Literal` construction.
+//!   training step performs zero per-iteration `Literal` construction and
+//!   zero host↔device state transfers.
 //! - [`Trainer`] (this module): a thin facade for API stability.  Binds an
 //!   engine to a [`crate::policy`] controller: each `step` runs the engine
 //!   at the current `<IL,FL>` triple, folds the raw `(E, R)` aggregates
@@ -34,7 +37,7 @@ use crate::policy::{make_policy, Class, ClassStats, Feedback, Policy, PrecState}
 use crate::resilience::FaultInjector;
 use crate::runtime::Runtime;
 
-pub use engine::{RawStep, StepEngine};
+pub use engine::{EvalAccum, RawStep, StepEngine};
 pub use session::Session;
 
 /// Owns one training run: a [`StepEngine`] plus the policy controller and
@@ -94,18 +97,33 @@ impl Trainer {
         self.engine.evaluate(test, &prec)
     }
 
-    /// Current parameters (for checkpointing / inspection).
-    pub fn params(&self) -> &[Literal] {
-        self.engine.params()
+    /// Host copies of the current parameters and momenta (checkpointing /
+    /// rollback snapshot / inspection).  With device-resident state this is
+    /// the on-demand download; in host mode it deep-copies the literals.
+    pub fn snapshot(&self) -> Result<(Vec<Literal>, Vec<Literal>)> {
+        self.engine.snapshot()
     }
 
-    pub fn mom(&self) -> &[Literal] {
-        self.engine.mom()
+    /// Is the parameter/momentum state device-resident (zero steady-state
+    /// host transfers)?
+    pub fn device_resident(&self) -> bool {
+        self.engine.device_resident()
     }
 
-    pub fn restore(&mut self, params: Vec<Literal>, mom: Vec<Literal>, prec: PrecState) {
-        self.engine.restore(params, mom);
+    /// Does eval mask wrapped tail batches exactly (per-example artifacts)?
+    pub fn eval_exact(&self) -> bool {
+        self.engine.eval_exact()
+    }
+
+    pub fn restore(
+        &mut self,
+        params: Vec<Literal>,
+        mom: Vec<Literal>,
+        prec: PrecState,
+    ) -> Result<()> {
+        self.engine.restore(params, mom)?;
         self.prec = prec;
+        Ok(())
     }
 
     /// Reset to iteration-0 state (rollback target when no checkpoint

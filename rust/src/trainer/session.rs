@@ -43,8 +43,13 @@ impl Session {
     pub fn new(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<Session> {
         let mut cfg = cfg.clone();
         let eval_batch = rt.manifest.eval_batch;
-        // size the synthetic test set to a multiple of the eval batch
-        cfg.test_n = cfg.test_n.div_ceil(eval_batch) * eval_batch;
+        if !rt.manifest.eval_per_example(&cfg.model) {
+            // legacy scalar eval artifacts rescale wrapped tail batches
+            // approximately, so size the synthetic test set to a multiple of
+            // the eval batch; per-example artifacts mask the tail exactly
+            // and need no round-up.
+            cfg.test_n = cfg.test_n.div_ceil(eval_batch) * eval_batch;
+        }
 
         let injector = Rc::new(RefCell::new(FaultInjector::from_specs(
             &cfg.faults,

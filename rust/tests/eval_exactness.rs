@@ -1,0 +1,108 @@
+//! Exact evaluation on non-multiple test sets, without artifacts: a
+//! deterministic mock scorer drives [`EvalBatcher`] batches through
+//! [`EvalAccum`], pinning the masking contract the engine relies on —
+//! wrapped tail padding never leaks into the totals, and the result is
+//! bit-identical across batch sizes.
+
+use qedps::data::{synth, Dataset, EvalBatcher, IMG_PIXELS};
+use qedps::trainer::EvalAccum;
+
+/// Deterministic per-example score: loss from the pixel payload, correctness
+/// from the label parity.  Any pad entry that sneaks into the sums shifts
+/// the result detectably.
+fn score(x: &[f32], y: i32) -> (f32, f32) {
+    let loss = x.iter().sum::<f32>() / IMG_PIXELS as f32 + 0.1 * y as f32;
+    let correct = if y % 2 == 0 { 1.0 } else { 0.0 };
+    (loss, correct)
+}
+
+/// Run the full set through [`EvalAccum`] at the given batch size, exactly
+/// as the engine's per-example path does: score every slot, sum only the
+/// first `valid`.
+fn eval_at_batch(ds: &Dataset, batch: usize) -> (f32, f32) {
+    let mut e = EvalBatcher::new(ds, batch);
+    let mut x = vec![0.0f32; batch * IMG_PIXELS];
+    let mut y = vec![0i32; batch];
+    let mut acc = EvalAccum::new();
+    while let Some(valid) = e.next_into(&mut x, &mut y) {
+        let mut loss_vec = Vec::with_capacity(batch);
+        let mut correct_vec = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let (l, c) = score(&x[b * IMG_PIXELS..(b + 1) * IMG_PIXELS], y[b]);
+            loss_vec.push(l);
+            correct_vec.push(c);
+        }
+        acc.add_examples(&loss_vec[..valid], &correct_vec[..valid]);
+    }
+    acc.finish()
+}
+
+#[test]
+fn non_multiple_set_is_bit_identical_across_batch_sizes() {
+    // 25 examples, batch 10: the third batch holds 5 valid + 5 wrapped pads
+    let ds = synth::generate(25, 11);
+    let (l1, a1) = eval_at_batch(&ds, 1);
+    let (l10, a10) = eval_at_batch(&ds, 10);
+    assert_eq!(l1.to_bits(), l10.to_bits(), "loss {l1} vs {l10}");
+    assert_eq!(a1.to_bits(), a10.to_bits(), "acc {a1} vs {a10}");
+    // and an awkward batch size that never divides anything
+    let (l7, a7) = eval_at_batch(&ds, 7);
+    assert_eq!(l1.to_bits(), l7.to_bits());
+    assert_eq!(a1.to_bits(), a7.to_bits());
+}
+
+#[test]
+fn unmasked_padding_contaminates_the_tail() {
+    // The pre-fix failure mode: summing the *whole* tail batch (pads
+    // included) and rescaling by valid/batch is not the true mean — the
+    // wrapped entries re-count the head of the set.
+    let ds = synth::generate(25, 11);
+    let (exact_loss, _) = eval_at_batch(&ds, 1);
+
+    let batch = 10;
+    let mut e = EvalBatcher::new(&ds, batch);
+    let mut x = vec![0.0f32; batch * IMG_PIXELS];
+    let mut y = vec![0i32; batch];
+    let mut acc = EvalAccum::new();
+    while let Some(valid) = e.next_into(&mut x, &mut y) {
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        for b in 0..batch {
+            let (l, c) = score(&x[b * IMG_PIXELS..(b + 1) * IMG_PIXELS], y[b]);
+            loss_sum += l;
+            correct += c;
+        }
+        acc.add_batch_sums(loss_sum, correct, valid, batch);
+    }
+    let (approx_loss, _) = acc.finish();
+    assert!(
+        (approx_loss - exact_loss).abs() > 1e-6,
+        "rescaled tail ({approx_loss}) should differ from exact ({exact_loss}) \
+         on this set — if not, the contrast test lost its teeth"
+    );
+}
+
+#[test]
+fn multiple_sized_set_needs_no_masking() {
+    // when batch | n the legacy rescale is a no-op and both paths agree
+    let ds = synth::generate(30, 12);
+    let (exact_l, exact_a) = eval_at_batch(&ds, 10);
+    let mut e = EvalBatcher::new(&ds, 10);
+    let mut x = vec![0.0f32; 10 * IMG_PIXELS];
+    let mut y = vec![0i32; 10];
+    let mut acc = EvalAccum::new();
+    while let Some(valid) = e.next_into(&mut x, &mut y) {
+        assert_eq!(valid, 10);
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        for b in 0..10 {
+            let (l, c) = score(&x[b * IMG_PIXELS..(b + 1) * IMG_PIXELS], y[b]);
+            loss_sum += l;
+            correct += c;
+        }
+        acc.add_batch_sums(loss_sum, correct, valid, 10);
+    }
+    let (l, a) = acc.finish();
+    assert_eq!(l.to_bits(), exact_l.to_bits());
+    assert_eq!(a.to_bits(), exact_a.to_bits());
+}

@@ -4,7 +4,7 @@
 //! pin the acceptance criterion for the sharded coordinator.
 
 use qedps::config::ExperimentConfig;
-use qedps::coordinator::{self, compare_rows_json, CompareRow, ShardOpts};
+use qedps::coordinator::{self, compare_rows_json, figures, CompareRow, ShardOpts};
 use qedps::runtime::Runtime;
 use qedps::trainer::run_experiment;
 
@@ -27,22 +27,31 @@ fn rows_bytes(rows: &[CompareRow]) -> String {
     compare_rows_json(rows).to_string_pretty()
 }
 
+/// Drop the `None` slots a shard filter leaves behind.
+fn done(rows: Vec<Option<CompareRow>>) -> Vec<CompareRow> {
+    rows.into_iter().flatten().collect()
+}
+
 #[test]
 fn compare_jobs2_matches_serial_bytes() {
     let base = sweep_cfg("jobs2");
     let schemes = ["qedps", "float"];
-    let serial = coordinator::compare_schemes_sharded(
-        &base,
-        &schemes,
-        &ShardOpts { jobs: 1, shard: None },
-    )
-    .unwrap();
-    let threaded = coordinator::compare_schemes_sharded(
-        &base,
-        &schemes,
-        &ShardOpts { jobs: 2, shard: None },
-    )
-    .unwrap();
+    let serial = done(
+        coordinator::compare_schemes_sharded(
+            &base,
+            &schemes,
+            &ShardOpts { jobs: 1, shard: None },
+        )
+        .unwrap(),
+    );
+    let threaded = done(
+        coordinator::compare_schemes_sharded(
+            &base,
+            &schemes,
+            &ShardOpts { jobs: 2, shard: None },
+        )
+        .unwrap(),
+    );
     assert_eq!(serial.len(), schemes.len());
     assert_eq!(
         rows_bytes(&serial),
@@ -55,37 +64,51 @@ fn compare_jobs2_matches_serial_bytes() {
 fn two_shard_union_matches_serial() {
     let base = sweep_cfg("union");
     let schemes = ["qedps", "float", "fixed13"];
-    let serial = coordinator::compare_schemes_sharded(
-        &base,
-        &schemes,
-        &ShardOpts { jobs: 1, shard: None },
-    )
-    .unwrap();
+    let serial = done(
+        coordinator::compare_schemes_sharded(
+            &base,
+            &schemes,
+            &ShardOpts { jobs: 1, shard: None },
+        )
+        .unwrap(),
+    );
 
-    // shard 1/2 owns indices {0, 2}, shard 2/2 owns {1}; merging the two
-    // slices in scheme order must rebuild the serial table exactly
-    let mut shards = Vec::new();
+    // shard 1/2 owns indices {0, 2}, shard 2/2 owns {1}; each shard's
+    // output round-trips through the on-disk slice format, and merging
+    // the slices must rebuild the serial table byte-for-byte — the exact
+    // pipeline behind `repro compare --shard i/n` + `repro compare merge`
+    let mut slices = Vec::new();
     for spec in ["1/2", "2/2"] {
-        let opts = ShardOpts {
-            jobs: 1,
-            shard: Some(coordinator::Shard::parse(spec).unwrap()),
-        };
-        shards.push(
-            coordinator::compare_schemes_sharded(&base, &schemes, &opts)
-                .unwrap()
-                .into_iter(),
-        );
+        let shard = coordinator::Shard::parse(spec).unwrap();
+        let opts = ShardOpts { jobs: 1, shard: Some(shard) };
+        let rows = coordinator::compare_schemes_sharded(&base, &schemes, &opts).unwrap();
+        let text = coordinator::compare_shard_json(&rows, &shard).to_string_pretty();
+        slices.push(coordinator::parse_shard_slice(&text).unwrap());
     }
-    let merged: Vec<CompareRow> = (0..schemes.len())
-        .map(|idx| shards[idx % 2].next().expect("shard slice exhausted early"))
-        .collect();
-    for it in &mut shards {
-        assert!(it.next().is_none(), "shard produced surplus rows");
-    }
+    let merged = coordinator::merge_shard_slices(&slices).unwrap();
 
     let names: Vec<&str> = merged.iter().map(|r| r.scheme.as_str()).collect();
     assert_eq!(names, schemes, "merged rows must follow scheme order");
     assert_eq!(rows_bytes(&serial), rows_bytes(&merged));
+}
+
+#[test]
+fn rounding_ab_sharded_matches_serial() {
+    let mut cfg = sweep_cfg("roundab");
+    cfg.iters = 20;
+    cfg.eval_every = 10;
+    let mut rt = Runtime::create().unwrap();
+    let serial = figures::rounding_ab(&mut rt, &cfg).unwrap();
+    drop(rt);
+    let sharded =
+        figures::rounding_ab_sharded(&cfg, &ShardOpts { jobs: 2, shard: None }).unwrap();
+    assert_eq!(serial.len(), sharded.len());
+    for ((ta, sa), (tb, sb)) in serial.iter().zip(sharded.iter()) {
+        assert_eq!(ta, tb, "arm order must match the lineup");
+        assert_eq!(sa.final_test_acc.to_bits(), sb.final_test_acc.to_bits());
+        assert_eq!(sa.best_test_acc.to_bits(), sb.best_test_acc.to_bits());
+        assert_eq!(sa.final_train_loss.to_bits(), sb.final_train_loss.to_bits());
+    }
 }
 
 #[test]

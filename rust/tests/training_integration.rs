@@ -124,6 +124,103 @@ fn step_hot_path_builds_no_literals() {
     );
 }
 
+/// Device-resident state invariant: after warmup, steady-state stepping
+/// performs zero host<->device parameter/momentum transfers — the train
+/// executable consumes last step's output buffers directly.
+#[test]
+fn step_hot_path_is_transfer_free_when_device_resident() {
+    let mut rt = Runtime::create().unwrap();
+    let cfg = quick_cfg("qedps");
+    let (train, _, _) = qedps::data::load_default(cfg.train_n, cfg.test_n);
+    let mut t = Trainer::new(&mut rt, cfg.clone()).unwrap();
+    if !t.device_resident() {
+        // platform fell back to host literals; the invariant doesn't apply
+        return;
+    }
+    let mut b = qedps::data::Batcher::new(&train, t.train_batch_size(), cfg.seed);
+    for i in 0..3 {
+        t.fill_batch(&mut b);
+        t.step(i).unwrap();
+    }
+    let before = qedps::runtime::host_transfers();
+    for i in 3..13 {
+        t.fill_batch(&mut b);
+        t.step(i).unwrap();
+    }
+    assert_eq!(
+        qedps::runtime::host_transfers(),
+        before,
+        "steady-state device-resident step must not copy state across host<->device"
+    );
+}
+
+/// The host-literal fallback path (`device_params = false`) must be a pure
+/// perf downgrade: the loss trajectory is identical to the device-resident
+/// path, and every step pays host<->device state traffic.
+#[test]
+fn fallback_literal_path_matches_device_resident_losses() {
+    let mut rt = Runtime::create().unwrap();
+    let cfg = quick_cfg("qedps");
+    let (train, _, _) = qedps::data::load_default(cfg.train_n, cfg.test_n);
+
+    let run = |rt: &mut Runtime, device: bool| -> Vec<u32> {
+        let mut c = cfg.clone();
+        c.device_params = device;
+        let mut t = Trainer::new(rt, c).unwrap();
+        let mut b = qedps::data::Batcher::new(&train, t.train_batch_size(), cfg.seed);
+        (0..8)
+            .map(|i| {
+                t.fill_batch(&mut b);
+                t.step(i).unwrap().loss.to_bits()
+            })
+            .collect()
+    };
+    let resident = run(&mut rt, true);
+    let fallback = run(&mut rt, false);
+    assert_eq!(
+        resident, fallback,
+        "host-literal fallback must reproduce the device-resident loss curve"
+    );
+}
+
+/// Non-multiple test sets evaluate exactly: a 25-example set at eval-batch
+/// granularity must score bit-identically to summing the same examples in
+/// smaller pieces (the per-example artifacts mask wrapped tail entries).
+#[test]
+fn eval_non_multiple_test_set_is_exact() {
+    let mut rt = Runtime::create().unwrap();
+    let cfg = quick_cfg("qedps");
+    let mut t = Trainer::new(&mut rt, cfg).unwrap();
+    if !t.eval_exact() {
+        // legacy scalar eval artifacts can only rescale the tail batch
+        return;
+    }
+    // 25 examples with a batch size that doesn't divide it: the tail batch
+    // wraps, and pad entries must not leak into the totals
+    let full = qedps::data::synth::generate(25, 11);
+    let (l_full, a_full) = t.evaluate(&full).unwrap();
+    // reference: the same 25 examples split as 10+10+5 via dataset slices
+    let mut loss_sum = 0f64;
+    let mut correct_sum = 0f64;
+    for (lo, hi) in [(0usize, 10usize), (10, 20), (20, 25)] {
+        let part = full.slice(lo, hi);
+        let (l, a) = t.evaluate(&part).unwrap();
+        let n = (hi - lo) as f64;
+        loss_sum += l as f64 * n;
+        correct_sum += a as f64 * n;
+    }
+    let l_ref = (loss_sum / 25.0) as f32;
+    let a_ref = (correct_sum / 25.0) as f32;
+    assert!(
+        (l_full - l_ref).abs() < 1e-5,
+        "loss {l_full} vs split reference {l_ref}"
+    );
+    assert!(
+        (a_full - a_ref).abs() < 1e-6,
+        "acc {a_full} vs split reference {a_ref}"
+    );
+}
+
 #[test]
 fn checkpoint_roundtrip_resumes_identically() {
     let mut rt = Runtime::create().unwrap();

@@ -43,6 +43,10 @@ if [ "$NO_SMOKE" -eq 1 ]; then
 elif [ -f artifacts/manifest.json ] || [ -n "${QEDPS_ARTIFACTS:-}" ]; then
     echo "== tier1: fault-recovery smoke =="
     cargo run --release --example fault_recovery
+    echo "== tier1: step-loop invariants (literal builds + host transfers) =="
+    # bench step exits nonzero if the timed loop constructs literals or, on
+    # a device-resident run, copies state across host<->device
+    cargo run --release -- bench step --iters 5 --quiet
 else
     echo "== tier1: smoke skipped (no artifacts; run 'make artifacts') =="
 fi
