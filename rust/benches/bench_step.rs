@@ -9,7 +9,12 @@ use qedps::data::{synth, Batcher};
 use qedps::runtime::Runtime;
 use qedps::trainer::Trainer;
 
-fn bench_model(rt: &mut Runtime, model: &str, scheme: &str) -> anyhow::Result<()> {
+fn bench_model(
+    rt: &mut Runtime,
+    model: &str,
+    scheme: &str,
+    span_overhead_ns: f64,
+) -> anyhow::Result<()> {
     let mut cfg = ExperimentConfig::default();
     cfg.model = model.into();
     cfg.scheme = scheme.into();
@@ -22,7 +27,7 @@ fn bench_model(rt: &mut Runtime, model: &str, scheme: &str) -> anyhow::Result<()
     let opts = BenchOpts { warmup_iters: 3, min_iters: 10, min_time_s: 2.0 };
     let builds_before = qedps::runtime::literal_builds();
     let xfers_before = qedps::runtime::host_transfers();
-    qedps::bench::bench_with(&format!("step/{model}/{scheme}"), &opts, || {
+    let r = qedps::bench::bench_with(&format!("step/{model}/{scheme}"), &opts, || {
         trainer.fill_batch(&mut batcher);
         iter += 1;
         black_box(trainer.step(iter).unwrap().loss);
@@ -41,6 +46,15 @@ fn bench_model(rt: &mut Runtime, model: &str, scheme: &str) -> anyhow::Result<()
             "step/{model}/{scheme} copied state across host<->device inside the hot loop"
         );
     }
+    // telemetry invariant: the ~6 spans on the step path must cost no more
+    // than 2% of the step itself when no trace sink is attached
+    anyhow::ensure!(
+        span_overhead_ns * 6.0 <= r.mean_ns * 0.02,
+        "step/{model}/{scheme}: telemetry span overhead {:.0} ns exceeds 2% of \
+         the {:.0} ns step",
+        span_overhead_ns * 6.0,
+        r.mean_ns
+    );
     Ok(())
 }
 
@@ -49,10 +63,18 @@ fn main() -> anyhow::Result<()> {
     let mut rt = Runtime::create()?;
     println!("== bench_step (train/eval step latency) ==");
 
+    // price one span create+drop (no sink) so every step bench below can
+    // assert the instrumentation stays inside its 2% budget
+    let span_opts = BenchOpts { warmup_iters: 100, min_iters: 10_000, min_time_s: 0.0 };
+    let span_r = qedps::bench::bench_with("telemetry span create+drop", &span_opts, || {
+        let _s = qedps::telemetry::span!("bench.span_probe");
+        black_box(&_s);
+    });
+
     for model in ["mlp", "lenet"] {
         for scheme in ["qedps", "na", "float"] {
             // qedps => stochastic artifact, na => nearest, float => float
-            bench_model(&mut rt, model, scheme)?;
+            bench_model(&mut rt, model, scheme, span_r.mean_ns)?;
         }
     }
 

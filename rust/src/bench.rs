@@ -37,7 +37,7 @@ impl BenchResult {
     pub fn report(&self) {
         let (val, unit) = human_time(self.mean_ns);
         let (min, min_unit) = human_time(self.min_ns);
-        println!(
+        crate::out!(
             "{:<44} {:>9.3} {:<2} (±{:>5.1}%, min {:>8.3} {}, n={})",
             self.name,
             val,
@@ -97,7 +97,7 @@ pub fn bench_with<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchRe
 /// Throughput helper: report elements/s alongside the timing.
 pub fn report_throughput(r: &BenchResult, elems: usize) {
     let eps = elems as f64 / (r.mean_ns / 1e9);
-    println!(
+    crate::out!(
         "{:<44} {:>9.1} Melem/s",
         format!("{} (throughput)", r.name),
         eps / 1e6

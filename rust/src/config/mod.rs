@@ -81,6 +81,9 @@ pub struct ExperimentConfig {
     /// host-literal path; the engine also falls back automatically when the
     /// platform can't execute against device buffers.
     pub device_params: bool,
+    /// Stream telemetry span/counter events to this JSONL file during the
+    /// run (`--trace` / `telemetry.trace_path`); `None` disables the sink.
+    pub trace_path: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -120,6 +123,7 @@ impl Default for ExperimentConfig {
             faults: Vec::new(),
             fault_seed: 7,
             device_params: true,
+            trace_path: None,
         }
     }
 }
@@ -238,6 +242,7 @@ impl ExperimentConfig {
             "runtime.device_params" | "device_params" => {
                 self.device_params = val.as_bool().context("expected bool")?
             }
+            "telemetry.trace_path" | "trace_path" => self.trace_path = Some(want_str()?),
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -364,6 +369,17 @@ mod tests {
         c.apply_set("device_params=true").unwrap();
         assert!(c.device_params);
         assert!(c.apply_set("device_params=1").is_err(), "wants a bool");
+    }
+
+    #[test]
+    fn trace_path_key() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.trace_path, None, "tracing is off by default");
+        c.apply_set("telemetry.trace_path=\"target/t.jsonl\"").unwrap();
+        assert_eq!(c.trace_path.as_deref(), Some("target/t.jsonl"));
+        c.apply_set("trace_path=\"other.jsonl\"").unwrap();
+        assert_eq!(c.trace_path.as_deref(), Some("other.jsonl"));
+        assert!(c.apply_set("trace_path=3").is_err(), "wants a string");
     }
 
     #[test]

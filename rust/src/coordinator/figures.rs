@@ -17,7 +17,8 @@ pub fn fig3(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<History> {
     let mut c = cfg.clone();
     c.scheme = "qedps".into();
     let hist = super::run_and_record(rt, &c, &format!("fig3_{}", c.model))?;
-    println!("\nFigure 3 — bit-width over training (weights / activations / grads)");
+    crate::out!();
+    crate::out!("Figure 3 — bit-width over training (weights / activations / grads)");
     ascii_series(
         &hist
             .train
@@ -37,7 +38,7 @@ pub fn fig3(rt: &mut Runtime, cfg: &ExperimentConfig) -> Result<History> {
         32.0,
     );
     let s = hist.summary();
-    println!(
+    crate::out!(
         "mean bits: weights={:.1} acts={:.1} grads={:.1}  (paper: ~16 / ~14 / near-full)",
         s.mean_weight_bits, s.mean_act_bits, s.mean_grad_bits
     );
@@ -57,7 +58,8 @@ fn fig4_one(rt: &mut Runtime, cfg: &ExperimentConfig, scheme: &str) -> Result<Hi
 }
 
 fn render_fig4(out: &[(String, History)]) {
-    println!("\nFigure 4 — test accuracy: DPS vs float vs fixed-13");
+    crate::out!();
+    crate::out!("Figure 4 — test accuracy: DPS vs float vs fixed-13");
     for (scheme, hist) in out {
         let series: Vec<(f64, f64)> = hist
             .eval
@@ -66,7 +68,7 @@ fn render_fig4(out: &[(String, History)]) {
             .collect();
         ascii_series(&series, &format!("{scheme} test acc"), 1.0);
         let s = hist.summary();
-        println!("  {scheme}: final={:.4} best={:.4}", s.final_test_acc, s.best_test_acc);
+        crate::out!("  {scheme}: final={:.4} best={:.4}", s.final_test_acc, s.best_test_acc);
     }
 }
 
@@ -125,9 +127,10 @@ fn rounding_one(
 }
 
 fn render_rounding(rows: &[(String, crate::metrics::RunSummary)]) {
-    println!("\nRounding A/B (Eq.2 stochastic vs Eq.1 nearest):");
+    crate::out!();
+    crate::out!("Rounding A/B (Eq.2 stochastic vs Eq.1 nearest):");
     for (tag, s) in rows {
-        println!(
+        crate::out!(
             "  {tag:<11} final_acc={:.4} best={:.4} loss={:.4}",
             s.final_test_acc, s.best_test_acc, s.final_train_loss
         );
@@ -204,12 +207,14 @@ pub fn model_layers(rt: &Runtime, model: &str) -> Result<Vec<macsim::LayerCost>>
 pub fn macsim_report(rt: &Runtime, model: &str) -> Result<()> {
     let layers = model_layers(rt, model)?;
     let unit = MacUnit::default();
-    println!("\nFlexible-MAC model — {model} @ batch {}", rt.manifest.train_batch);
-    println!("{:<10} {:>14}", "layer", "MACs/fwd");
+    crate::out!();
+    crate::out!("Flexible-MAC model — {model} @ batch {}", rt.manifest.train_batch);
+    crate::out!("{:<10} {:>14}", "layer", "MACs/fwd");
     for l in &layers {
-        println!("{:<10} {:>14}", l.name, l.macs);
+        crate::out!("{:<10} {:>14}", l.name, l.macs);
     }
-    println!("\n{:>6} {:>12} {:>10}", "bits", "cyc/iter", "speedup");
+    crate::out!();
+    crate::out!("{:>6} {:>12} {:>10}", "bits", "cyc/iter", "speedup");
     for bits in [32, 24, 20, 16, 14, 12, 8, 4] {
         let p = PrecState::uniform(crate::fixedpoint::Format::new(bits / 2, bits - bits / 2));
         let cyc = macsim::iteration_cycles(&unit, &layers, &p);
@@ -218,7 +223,7 @@ pub fn macsim_report(rt: &Runtime, model: &str) -> Result<()> {
             &layers,
             &PrecState::uniform(crate::fixedpoint::Format::new(16, 16)),
         );
-        println!("{bits:>6} {cyc:>12} {:>9.2}x", base as f64 / cyc as f64);
+        crate::out!("{bits:>6} {cyc:>12} {:>9.2}x", base as f64 / cyc as f64);
     }
     Ok(())
 }
@@ -226,7 +231,7 @@ pub fn macsim_report(rt: &Runtime, model: &str) -> Result<()> {
 /// Plain-terminal line plot: `series` = (x, y) pairs.
 pub fn ascii_series(series: &[(f64, f64)], label: &str, ymax_hint: f64) {
     if series.is_empty() {
-        println!("  [{label}: no data]");
+        crate::out!("  [{label}: no data]");
         return;
     }
     const W: usize = 72;
@@ -248,11 +253,11 @@ pub fn ascii_series(series: &[(f64, f64)], label: &str, ymax_hint: f64) {
         let row = (H - 1).saturating_sub(row.min(H - 1));
         grid[row][col.min(W - 1)] = b'*';
     }
-    println!("  {label} (y: 0..{ymax:.1}, x: 0..{xmax:.0})");
+    crate::out!("  {label} (y: 0..{ymax:.1}, x: 0..{xmax:.0})");
     for row in grid {
-        println!("  |{}", String::from_utf8_lossy(&row));
+        crate::out!("  |{}", String::from_utf8_lossy(&row));
     }
-    println!("  +{}", "-".repeat(W));
+    crate::out!("  +{}", "-".repeat(W));
 }
 
 #[cfg(test)]

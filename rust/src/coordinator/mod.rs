@@ -61,6 +61,12 @@ pub struct CompareRow {
     pub watchdog_trips: u64,
     /// Rollbacks actually performed.
     pub recoveries: u64,
+    /// Mean wall time per logged training step (ms).  Wall-clock columns
+    /// are machine-dependent: the sharding-equivalence tests zero them
+    /// before comparing tables byte-for-byte.
+    pub mean_step_ms: f64,
+    /// Nearest-rank p95 of the logged step times (ms).
+    pub p95_step_ms: f64,
 }
 
 /// One scheme's comparison run: train, record, fold into a table row.
@@ -89,6 +95,8 @@ fn compare_one(rt: &mut Runtime, base: &ExperimentConfig, scheme: &str) -> Resul
         hw_speedup: speedup,
         watchdog_trips: s.watchdog_trips,
         recoveries: s.recoveries,
+        mean_step_ms: s.mean_step_ms,
+        p95_step_ms: s.p95_step_ms,
     })
 }
 
@@ -119,21 +127,21 @@ pub fn compare_schemes_sharded(
 }
 
 pub fn print_compare_table(rows: &[CompareRow]) {
-    println!(
-        "\n{:<13} {:>9} {:>9} {:>8} {:>8} {:>8} {:>10} {:>9} {:>6} {:>6}",
+    crate::out!(
+        "\n{:<13} {:>9} {:>9} {:>8} {:>8} {:>8} {:>10} {:>9} {:>6} {:>6} {:>8} {:>8}",
         "scheme", "final_acc", "best_acc", "w_bits", "a_bits", "g_bits",
-        "converged", "hw_speed", "trips", "recov"
+        "converged", "hw_speed", "trips", "recov", "step_ms", "p95_ms"
     );
-    println!("{}", "-".repeat(96));
+    crate::out!("{}", "-".repeat(114));
     for r in rows {
-        println!(
-            "{:<13} {:>9.4} {:>9.4} {:>8.1} {:>8.1} {:>8.1} {:>10} {:>8.2}x {:>6} {:>6}",
+        crate::out!(
+            "{:<13} {:>9.4} {:>9.4} {:>8.1} {:>8.1} {:>8.1} {:>10} {:>8.2}x {:>6} {:>6} {:>8.1} {:>8.1}",
             r.scheme, r.final_acc, r.best_acc, r.mean_w_bits, r.mean_a_bits,
             r.mean_g_bits, if r.converged { "yes" } else { "NO" }, r.hw_speedup,
-            r.watchdog_trips, r.recoveries
+            r.watchdog_trips, r.recoveries, r.mean_step_ms, r.p95_step_ms
         );
     }
-    println!();
+    crate::out!();
 }
 
 /// The canonical JSON field list of one row — shared by the serial table
@@ -150,6 +158,8 @@ fn row_json_fields(r: &CompareRow) -> Vec<(&'static str, Json)> {
         ("hw_speedup", Json::Num(r.hw_speedup)),
         ("watchdog_trips", Json::Num(r.watchdog_trips as f64)),
         ("recoveries", Json::Num(r.recoveries as f64)),
+        ("mean_step_ms", Json::Num(r.mean_step_ms)),
+        ("p95_step_ms", Json::Num(r.p95_step_ms)),
     ]
 }
 
@@ -174,6 +184,9 @@ impl CompareRow {
             hw_speedup: f("hw_speedup")?,
             watchdog_trips: f("watchdog_trips")? as u64,
             recoveries: f("recoveries")? as u64,
+            // absent in pre-telemetry shard slices: default rather than fail
+            mean_step_ms: j.get("mean_step_ms").as_f64().unwrap_or(0.0),
+            p95_step_ms: j.get("p95_step_ms").as_f64().unwrap_or(0.0),
         })
     }
 }
@@ -299,6 +312,8 @@ mod tests {
             hw_speedup: 1.75,
             watchdog_trips: 1,
             recoveries: 0,
+            mean_step_ms: 12.5,
+            p95_step_ms: 20.0,
         }
     }
 
@@ -324,6 +339,18 @@ mod tests {
             Json::obj(row_json_fields(&r)).to_string(),
             Json::obj(row_json_fields(&back)).to_string()
         );
+    }
+
+    #[test]
+    fn from_json_defaults_missing_timing_fields() {
+        // pre-telemetry shard slices carry no wall-clock columns
+        let r = row("qedps", 0.9);
+        let mut fields = row_json_fields(&r);
+        fields.retain(|(k, _)| *k != "mean_step_ms" && *k != "p95_step_ms");
+        let back = CompareRow::from_json(&Json::obj(fields)).unwrap();
+        assert_eq!(back.mean_step_ms, 0.0);
+        assert_eq!(back.p95_step_ms, 0.0);
+        assert_eq!(back.scheme, "qedps");
     }
 
     #[test]

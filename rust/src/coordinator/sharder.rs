@@ -113,12 +113,19 @@ where
     } else {
         let queue = AtomicUsize::new(0);
         let out = Mutex::new(&mut slots);
+        // Telemetry registries are thread-local, so counters/spans recorded
+        // inside a worker would vanish with its thread.  Each worker's final
+        // snapshot *is* its delta (fresh thread = empty registry); collect
+        // them and fold into the calling thread's registry below.
+        let snaps: Mutex<Vec<(usize, crate::telemetry::Snapshot)>> =
+            Mutex::new(Vec::with_capacity(workers));
         std::thread::scope(|scope| {
             for w in 0..workers {
                 let queue = &queue;
                 let out = &out;
                 let selected = &selected;
                 let f = &f;
+                let snaps = &snaps;
                 scope.spawn(move || {
                     // lazily built: a worker that never claims work never
                     // pays for a PJRT client
@@ -138,9 +145,22 @@ where
                         let mut guard = out.lock().unwrap_or_else(|p| p.into_inner());
                         guard[idx] = Some(res);
                     }
+                    let snap = crate::telemetry::snapshot();
+                    if !snap.is_empty() {
+                        let mut guard = snaps.lock().unwrap_or_else(|p| p.into_inner());
+                        guard.push((w, snap));
+                    }
                 });
             }
         });
+        // Merge in worker order (not completion order).  Addition is
+        // commutative so the totals match a serial run regardless — the
+        // sort just keeps the merge itself deterministic.
+        let mut snaps = snaps.into_inner().unwrap_or_else(|p| p.into_inner());
+        snaps.sort_by_key(|&(w, _)| w);
+        for (_, snap) in &snaps {
+            crate::telemetry::absorb(snap);
+        }
     }
 
     let mut merged = Vec::with_capacity(specs.len());

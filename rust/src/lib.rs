@@ -36,6 +36,12 @@
 //!   subprocess slices) with deterministic, byte-identical merges;
 //! * [`resilience`] — divergence watchdog, fault injection, retry/backoff
 //!   and failure reporting (the run-survival layer around [`trainer`]);
+//! * [`telemetry`] — zero-dep instrumentation: RAII spans feeding
+//!   log2-bucketed histograms, a counter/gauge registry (the home of
+//!   `literal_builds`/`host_transfers` and the resilience counters), an
+//!   optional JSONL trace sink (`--trace` / `telemetry.trace_path`), and
+//!   the `repro trace summarize` analyzer; per-worker registries merge
+//!   deterministically across sweep dispatch modes;
 //! * [`util`], [`config`], [`cli`], [`metrics`], [`bench`], [`testutil`] —
 //!   in-repo substrates (JSON, TOML-subset config, CLI, CSV, RNG,
 //!   micro-bench and property-test harnesses); the offline crate set has no
@@ -80,6 +86,7 @@ pub mod metrics;
 pub mod policy;
 pub mod resilience;
 pub mod runtime;
+pub mod telemetry;
 pub mod testutil;
 pub mod trainer;
 pub mod util;

@@ -7,7 +7,8 @@
 //! repro compare merge <files...>                    join compare.shard-*.json slices
 //! repro rounding-ab [--jobs N] [--shard i/n]        Eq.1 vs Eq.2 A/B
 //! repro macsim   [--model M]                        flexible-MAC speedup table
-//! repro bench step [--model M] [--scheme S]         step-loop micro-benchmark
+//! repro bench step [--model M] [--scheme S] [--json F]  step-loop micro-benchmark
+//! repro trace summarize <file.jsonl>                analyze a --trace JSONL file
 //! repro ckpt list|verify|prune --checkpoint-dir D   checkpoint maintenance
 //! repro gen-data --out DIR [--n N]                  write synthetic IDX files
 //! repro info                                        artifact/manifest summary
@@ -40,6 +41,8 @@ const SPEC: Spec = Spec {
         ("fault-seed", "N", "seed for fault-site selection"),
         ("jobs", "N", "worker threads for multi-run sweeps (compare / fig 4 / rounding-ab)"),
         ("shard", "i/n", "run only the i-th of n sweep shards (1-based)"),
+        ("trace", "FILE", "stream telemetry span/counter events to this JSONL file"),
+        ("json", "FILE", "write machine-readable results here (for `bench step`)"),
     ],
     switches: &[
         ("help", "show usage"),
@@ -91,6 +94,9 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if args.switch("no-device-params") {
         cfg.device_params = false;
     }
+    if let Some(t) = args.flag("trace") {
+        cfg.trace_path = Some(t.into());
+    }
     for kv in args.flag_all("set") {
         cfg.apply_set(kv)?;
     }
@@ -103,7 +109,7 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
 /// constructions and (when parameters stay device-resident) zero host↔device
 /// state transfers, and prices what the pre-refactor
 /// build-a-literal-per-input path would cost on top.
-fn bench_step(cfg: &ExperimentConfig, iters: u64) -> Result<()> {
+fn bench_step(cfg: &ExperimentConfig, iters: u64, json_out: Option<&str>) -> Result<()> {
     use qedps::bench::{bench_with, black_box, BenchOpts};
     use qedps::data::Batcher;
     use qedps::runtime::{host_transfers, literal_builds, literal_f32, literal_i32};
@@ -120,9 +126,10 @@ fn bench_step(cfg: &ExperimentConfig, iters: u64) -> Result<()> {
     );
     let opts = BenchOpts { warmup_iters: 3, min_iters: iters, min_time_s: 0.0 };
     let mut iter = 0u64;
+    let telemetry_base = qedps::telemetry::snapshot();
     let before = literal_builds();
     let xfers_before = host_transfers();
-    bench_with(
+    let step_r = bench_with(
         &format!("step/{}/{} (pinned inputs)", cfg.model, cfg.scheme),
         &opts,
         || {
@@ -179,6 +186,52 @@ fn bench_step(cfg: &ExperimentConfig, iters: u64) -> Result<()> {
              (device residency unavailable on this platform)"
         );
     }
+
+    // Telemetry overhead budget: the instrumented step path holds ~6 spans
+    // (engine.step/refill/quantize/exec/readback plus one of slack); with no
+    // trace sink attached their combined cost must stay within 2% of the
+    // measured step time.
+    let span_opts = BenchOpts { warmup_iters: 100, min_iters: 10_000, min_time_s: 0.0 };
+    let span_r = bench_with("telemetry span create+drop (no sink)", &span_opts, || {
+        let _s = qedps::telemetry::span!("bench.span_probe");
+        black_box(&_s);
+    });
+    let span_overhead_ns = span_r.mean_ns * 6.0;
+    let budget_ns = step_r.mean_ns * 0.02;
+    println!(
+        "telemetry overhead: ~6 spans/step = {span_overhead_ns:.0} ns \
+         vs 2% budget {budget_ns:.0} ns"
+    );
+    anyhow::ensure!(
+        span_overhead_ns <= budget_ns,
+        "telemetry span overhead {span_overhead_ns:.0} ns/step exceeds \
+         2% of step time ({budget_ns:.0} ns)"
+    );
+
+    if let Some(path) = json_out {
+        use qedps::util::json::Json;
+        let delta = qedps::telemetry::snapshot().diff(&telemetry_base);
+        let j = Json::obj(vec![
+            ("bench", Json::Str("step".into())),
+            ("model", Json::Str(cfg.model.clone())),
+            ("scheme", Json::Str(cfg.scheme.clone())),
+            ("iters", Json::Num(step_r.iters as f64)),
+            ("mean_step_ns", Json::Num(step_r.mean_ns)),
+            ("stddev_step_ns", Json::Num(step_r.stddev_ns)),
+            ("min_step_ns", Json::Num(step_r.min_ns)),
+            ("literal_builds", Json::Num(builds as f64)),
+            ("host_transfers", Json::Num(xfers as f64)),
+            ("span_overhead_ns", Json::Num(span_overhead_ns)),
+            ("telemetry", delta.to_json()),
+        ]);
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, j.to_string_pretty())?;
+        println!("wrote bench json -> {path}");
+    }
     Ok(())
 }
 
@@ -206,7 +259,7 @@ fn main() -> Result<()> {
     if args.switch("help") || sub == "help" {
         print!("{}", SPEC.usage());
         println!(
-            "\nsubcommands: train figures compare rounding-ab macsim bench ckpt gen-data info"
+            "\nsubcommands: train figures compare rounding-ab macsim bench trace ckpt gen-data info"
         );
         return Ok(());
     }
@@ -335,9 +388,19 @@ fn main() -> Result<()> {
             "step" => {
                 let cfg = build_config(&args)?;
                 let iters = args.flag_parse::<u64>("iters")?.unwrap_or(50).max(1);
-                bench_step(&cfg, iters)?;
+                bench_step(&cfg, iters, args.flag("json"))?;
             }
             other => bail!("unknown bench target '{other}' — try `repro bench step`"),
+        },
+        "trace" => match args.pos(0) {
+            Some("summarize") => {
+                let file = args
+                    .pos(1)
+                    .context("trace summarize needs a trace file (JSONL from --trace)")?;
+                let summary = qedps::telemetry::trace::summarize(file)?;
+                print!("{}", summary.render());
+            }
+            _ => bail!("unknown trace action — try `repro trace summarize <file.jsonl>`"),
         },
         "ckpt" => {
             use qedps::trainer::checkpoint;

@@ -55,6 +55,10 @@ pub struct History {
     pub train: Vec<TrainRecord>,
     pub eval: Vec<EvalRecord>,
     pub recovery: Vec<RecoveryEvent>,
+    /// This run's telemetry delta (counters + span histograms), captured by
+    /// [`crate::trainer::Session`] at run end; `None` for histories built
+    /// outside a session (unit tests, hand-rolled loops).
+    pub telemetry: Option<crate::telemetry::Snapshot>,
 }
 
 /// How a run ended.
@@ -93,6 +97,8 @@ pub struct RunSummary {
     pub min_weight_bits: i32,
     pub min_act_bits: i32,
     pub mean_step_ms: f64,
+    /// Nearest-rank p95 of the logged per-iteration step times.
+    pub p95_step_ms: f64,
     pub iters: u64,
     /// Watchdog rollbacks performed during the run.
     pub recoveries: u64,
@@ -104,6 +110,16 @@ pub struct RunSummary {
 /// Recovery-event kinds that mean the watchdog fired.
 const TRIP_KINDS: [&str; 4] =
     ["non_finite_loss", "loss_explosion", "sustained_overflow", "abort"];
+
+/// Nearest-rank quantile of an unsorted sample (0.0 when empty).
+fn quantile(mut vals: Vec<f64>, q: f64) -> f64 {
+    if vals.is_empty() {
+        return 0.0;
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((q.clamp(0.0, 1.0) * vals.len() as f64).ceil() as usize).max(1);
+    vals[rank - 1]
+}
 
 impl History {
     pub fn new(scheme: &str, model: &str) -> Self {
@@ -145,6 +161,10 @@ impl History {
                 .min()
                 .unwrap_or(0),
             mean_step_ms: mean(&|r| r.step_ms),
+            p95_step_ms: quantile(
+                self.train.iter().map(|r| r.step_ms).collect(),
+                0.95,
+            ),
             iters: self.train.last().map(|r| r.iter + 1).unwrap_or(0),
             recoveries: self
                 .recovery
@@ -244,9 +264,17 @@ impl History {
             ("min_weight_bits", Json::Num(s.min_weight_bits as f64)),
             ("min_act_bits", Json::Num(s.min_act_bits as f64)),
             ("mean_step_ms", Json::Num(s.mean_step_ms)),
+            ("p95_step_ms", Json::Num(s.p95_step_ms)),
             ("recoveries", Json::Num(s.recoveries as f64)),
             ("watchdog_trips", Json::Num(s.watchdog_trips as f64)),
             ("recovery_events", self.recovery_json()),
+            (
+                "telemetry",
+                self.telemetry
+                    .as_ref()
+                    .map(|t| t.to_json())
+                    .unwrap_or(Json::Null),
+            ),
         ])
     }
 }
@@ -360,5 +388,77 @@ mod tests {
         let back = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(back.get("recovery_events").at(1).get("kind").as_str(),
                    Some("non_finite_loss"));
+    }
+
+    #[test]
+    fn recovery_json_roundtrips_through_util_json() {
+        let mut h = History::new("qedps", "mlp");
+        h.recovery.push(RecoveryEvent {
+            iter: 7,
+            kind: "loss_explosion".into(),
+            detail: "loss exploded (9.0 vs baseline 1.0)".into(),
+            rollback_to: Some(4),
+        });
+        h.recovery.push(RecoveryEvent {
+            iter: 9,
+            kind: "resume".into(),
+            detail: "resumed from checkpoint at iter 8".into(),
+            rollback_to: None,
+        });
+        let text = h.recovery_json().to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), 2);
+        assert_eq!(back.at(0).get("iter").as_f64(), Some(7.0));
+        assert_eq!(back.at(0).get("kind").as_str(), Some("loss_explosion"));
+        assert_eq!(back.at(0).get("rollback_to").as_f64(), Some(4.0));
+        assert_eq!(
+            back.at(1).get("detail").as_str(),
+            Some("resumed from checkpoint at iter 8")
+        );
+        assert!(back.at(1).get("rollback_to").is_null());
+        // an empty trail is an empty array, not null
+        assert_eq!(History::new("a", "b").recovery_json(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn p95_step_ms_is_nearest_rank() {
+        let mut h = History::new("qedps", "mlp");
+        for i in 0..20 {
+            let mut r = rec(i, 16);
+            r.step_ms = (i + 1) as f64; // 1..=20
+            h.train.push(r);
+        }
+        let s = h.summary();
+        assert_eq!(s.p95_step_ms, 19.0, "ceil(0.95*20) = rank 19");
+        assert!((s.mean_step_ms - 10.5).abs() < 1e-12);
+        assert_eq!(h.summary_json().get("p95_step_ms").as_f64(), Some(19.0));
+        assert_eq!(History::new("a", "b").summary().p95_step_ms, 0.0);
+    }
+
+    #[test]
+    fn telemetry_block_roundtrips_in_summary_json() {
+        let mut h = History::new("qedps", "mlp");
+        h.train.push(rec(0, 16));
+        assert!(
+            h.summary_json().get("telemetry").is_null(),
+            "histories without a session carry no telemetry"
+        );
+
+        let base = crate::telemetry::snapshot();
+        crate::telemetry::count("test.metrics_counter", 3);
+        {
+            let _s = crate::telemetry::span!("test.metrics_span");
+        }
+        h.telemetry = Some(crate::telemetry::snapshot().diff(&base));
+
+        let text = h.summary_json().to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        let snap =
+            crate::telemetry::Snapshot::from_json(back.get("telemetry")).unwrap();
+        assert_eq!(snap.counter("test.metrics_counter"), 3);
+        assert_eq!(
+            snap.spans().get("test.metrics_span").map(|s| s.count()),
+            Some(1)
+        );
     }
 }

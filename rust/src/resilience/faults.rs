@@ -124,6 +124,7 @@ impl FaultInjector {
         let pos = self.faults.iter().position(|f| {
             matches!(f, Fault::NanLoss { at } | Fault::InfLoss { at } if *at == iter)
         })?;
+        crate::telemetry::count("faults.injected", 1);
         match self.faults.remove(pos) {
             Fault::NanLoss { .. } => Some(f32::NAN),
             Fault::InfLoss { .. } => Some(f32::INFINITY),
@@ -138,6 +139,7 @@ impl FaultInjector {
             .faults
             .iter()
             .position(|f| matches!(f, Fault::BitFlip { at, .. } if *at == iter))?;
+        crate::telemetry::count("faults.injected", 1);
         match self.faults.remove(pos) {
             Fault::BitFlip { class, .. } => Some(class),
             _ => unreachable!(),
@@ -151,6 +153,7 @@ impl FaultInjector {
             return None;
         }
         self.read_fails -= 1;
+        crate::telemetry::count("faults.injected", 1);
         Some(anyhow::anyhow!("injected transient read failure ({what})"))
     }
 

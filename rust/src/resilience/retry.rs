@@ -27,6 +27,8 @@ pub fn retry_with_backoff<T>(
                 return Ok(v);
             }
             Err(e) => {
+                // failed attempts only: a clean run leaves the counter at 0
+                crate::telemetry::count("retry.attempts", 1);
                 if attempt + 1 < attempts {
                     crate::log_warn!(
                         "{what}: attempt {}/{attempts} failed ({e:#}); retrying in {delay}ms",

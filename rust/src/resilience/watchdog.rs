@@ -104,6 +104,13 @@ impl Watchdog {
         Self { cfg, ewma: 0.0, seen: 0, over: [0; 3], armed_at: 0 }
     }
 
+    /// Every trip exits through here so the `watchdog.trips` counter stays
+    /// in lock-step with what [`Watchdog::observe`] reports.
+    fn tripped(reason: TripReason) -> TripReason {
+        crate::telemetry::count("watchdog.trips", 1);
+        reason
+    }
+
     /// Feed one iteration's feedback; `Some(reason)` means roll back now.
     pub fn observe(&mut self, fb: &Feedback) -> Option<TripReason> {
         let armed = fb.iter >= self.armed_at;
@@ -116,7 +123,9 @@ impl Watchdog {
         }
 
         if !fb.loss.is_finite() {
-            return armed.then_some(TripReason::NonFiniteLoss { loss: fb.loss });
+            return armed
+                .then_some(TripReason::NonFiniteLoss { loss: fb.loss })
+                .map(Self::tripped);
         }
 
         // Compare against the baseline *before* folding the new loss in, so
@@ -126,7 +135,7 @@ impl Watchdog {
             && self.seen >= self.cfg.warmup
             && fb.loss > self.cfg.loss_ratio * baseline
         {
-            return Some(TripReason::LossExplosion { loss: fb.loss, baseline });
+            return Some(Self::tripped(TripReason::LossExplosion { loss: fb.loss, baseline }));
         }
         self.ewma = if self.seen == 0 {
             fb.loss as f64
@@ -139,11 +148,11 @@ impl Watchdog {
             for (i, class) in CLASSES.into_iter().enumerate() {
                 if self.over[i] >= self.cfg.r_window {
                     self.over[i] = 0;
-                    return Some(TripReason::SustainedOverflow {
+                    return Some(Self::tripped(TripReason::SustainedOverflow {
                         class,
                         r: fb.class(class).r,
                         window: self.cfg.r_window,
-                    });
+                    }));
                 }
             }
         }

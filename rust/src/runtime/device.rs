@@ -52,15 +52,19 @@ impl DeviceBuf {
     }
 
     /// Upload a *state* tensor (parameter/momentum) — counted against
-    /// [`super::host_transfers`].
+    /// [`super::host_transfers`], with the direction broken out under the
+    /// `device.h2d_state` telemetry counter.
     pub fn from_state_literal(client: &PjRtClient, lit: &Literal) -> Result<DeviceBuf> {
         note_host_transfers(1);
+        crate::telemetry::count("device.h2d_state", 1);
         Self::from_literal(client, lit)
     }
 
-    /// Download a *state* tensor back to the host — counted.
+    /// Download a *state* tensor back to the host — counted (direction
+    /// broken out under `device.d2h_state`).
     pub fn to_state_literal(&self) -> Result<Literal> {
         note_host_transfers(1);
+        crate::telemetry::count("device.d2h_state", 1);
         self.buf
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("downloading device buffer: {e}"))

@@ -17,7 +17,7 @@ pub mod device;
 pub mod manifest;
 pub mod pinned;
 
-use std::cell::{Cell, RefCell};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::rc::Rc;
@@ -31,11 +31,10 @@ pub use pinned::{PinnedF32, PinnedI32};
 
 use crate::resilience::FaultInjector;
 
-thread_local! {
-    /// How many host literals this thread has constructed (see
-    /// [`literal_builds`]).
-    static LITERAL_BUILDS: Cell<u64> = const { Cell::new(0) };
-}
+/// Telemetry counter name behind [`literal_builds`].
+pub const CTR_LITERAL_BUILDS: &str = "runtime.literal_builds";
+/// Telemetry counter name behind [`host_transfers`].
+pub const CTR_HOST_TRANSFERS: &str = "runtime.host_transfers";
 
 /// Running count of `Literal` constructions on this thread.
 ///
@@ -44,18 +43,17 @@ thread_local! {
 /// counter.  Tests and `repro bench step` snapshot it around the hot loop
 /// to prove `Trainer::step` performs zero per-iteration literal
 /// allocations for its batch/precision inputs.
+///
+/// Since the telemetry subsystem landed this is a thin shim over the
+/// `runtime.literal_builds` counter in [`crate::telemetry`] — same
+/// thread-local semantics, but the count now also appears in snapshots,
+/// traces and `History::summary_json()`.
 pub fn literal_builds() -> u64 {
-    LITERAL_BUILDS.with(|c| c.get())
+    crate::telemetry::counter(CTR_LITERAL_BUILDS)
 }
 
 fn count_literal_build() {
-    LITERAL_BUILDS.with(|c| c.set(c.get() + 1));
-}
-
-thread_local! {
-    /// How many *state-tensor* host↔device transfers this thread has
-    /// performed (see [`host_transfers`]).
-    static HOST_TRANSFERS: Cell<u64> = const { Cell::new(0) };
+    crate::telemetry::count(CTR_LITERAL_BUILDS, 1);
 }
 
 /// Running count of parameter/momentum **state-tensor** transfers between
@@ -70,13 +68,14 @@ thread_local! {
 /// down), and snapshot/restore/reinit/corrupt operations count their
 /// on-demand copies.  `repro bench step`, `benches/bench_step.rs`, and the
 /// integration tests snapshot it around the hot loop, exactly like
-/// [`literal_builds`].
+/// [`literal_builds`].  Shimmed over the `runtime.host_transfers`
+/// telemetry counter (see [`literal_builds`] for the rationale).
 pub fn host_transfers() -> u64 {
-    HOST_TRANSFERS.with(|c| c.get())
+    crate::telemetry::counter(CTR_HOST_TRANSFERS)
 }
 
 pub(crate) fn note_host_transfers(n: u64) {
-    HOST_TRANSFERS.with(|c| c.set(c.get() + n));
+    crate::telemetry::count(CTR_HOST_TRANSFERS, n);
 }
 
 /// A compiled module plus its manifest spec.
@@ -358,5 +357,15 @@ mod tests {
         note_host_transfers(3);
         note_host_transfers(1);
         assert_eq!(host_transfers(), before + 4);
+    }
+
+    #[test]
+    fn counter_shims_surface_in_telemetry() {
+        let before = crate::telemetry::snapshot();
+        literal_f32(&[0.0], &[]).unwrap();
+        note_host_transfers(2);
+        let delta = crate::telemetry::snapshot().diff(&before);
+        assert_eq!(delta.counter(CTR_LITERAL_BUILDS), 1);
+        assert_eq!(delta.counter(CTR_HOST_TRANSFERS), 2);
     }
 }

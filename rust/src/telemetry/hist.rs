@@ -1,0 +1,280 @@
+//! Log2-bucketed latency histogram: fixed memory, commutative merge.
+//!
+//! Durations (nanoseconds) land in bucket `floor(log2(ns))`, so 64 buckets
+//! cover the full `u64` range with ~2x resolution — plenty for "which phase
+//! got slower" questions, and cheap enough to record on every span with no
+//! sink attached.  Exact `min`/`max` ride alongside the buckets, and
+//! percentiles are answered from the bucket boundaries (upper bound of the
+//! bucket holding the requested rank, clamped to the exact extremes).
+//!
+//! Merging adds bucket counts element-wise; addition is commutative and
+//! associative, so per-worker histograms merged in any order produce the
+//! same totals — the property [`crate::coordinator::sharder`] relies on for
+//! deterministic sweep telemetry.
+
+use crate::util::json::Json;
+
+const BUCKETS: usize = 64;
+
+/// One phase's duration distribution (all values in nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Hist {
+    count: u64,
+    sum_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+    buckets: [u64; BUCKETS],
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { count: 0, sum_ns: 0, min_ns: u64::MAX, max_ns: 0, buckets: [0; BUCKETS] }
+    }
+}
+
+/// Bucket index for a duration: `floor(log2(ns))`, with 0 ns in bucket 0.
+fn bucket_of(ns: u64) -> usize {
+    (63 - ns.max(1).leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of a bucket (`2^(i+1) - 1`).
+fn bucket_hi(i: usize) -> u64 {
+    if i + 1 >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+        self.buckets[bucket_of(ns)] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_ns
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Value at quantile `q` in `[0, 1]`: the upper bound of the bucket
+    /// holding the `ceil(q * count)`-th sample, clamped into the exact
+    /// `[min, max]` envelope (so p100 is exact and p0 never undershoots).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return bucket_hi(i).clamp(self.min_ns, self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// Element-wise bucket addition (commutative — see module docs).
+    pub fn merge(&mut self, other: &Hist) {
+        if other.count == 0 {
+            return;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Counts in `other` but not yet in `self` removed — the per-run delta
+    /// of a thread-accumulated histogram (`self` is the later snapshot).
+    pub fn diff(&self, earlier: &Hist) -> Hist {
+        let mut out = Hist {
+            count: self.count.saturating_sub(earlier.count),
+            sum_ns: self.sum_ns.saturating_sub(earlier.sum_ns),
+            // extremes are not subtractable; keep the later snapshot's view
+            min_ns: self.min_ns,
+            max_ns: self.max_ns,
+            buckets: [0; BUCKETS],
+        };
+        for i in 0..BUCKETS {
+            out.buckets[i] = self.buckets[i].saturating_sub(earlier.buckets[i]);
+        }
+        out
+    }
+
+    /// JSON form: summary stats plus the sparse `[bucket, count]` pairs
+    /// needed to reconstruct the distribution.
+    pub fn to_json(&self) -> Json {
+        let sparse: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, &n)| Json::arr_f64(&[i as f64, n as f64]))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum_ns", Json::Num(self.sum_ns as f64)),
+            ("min_ns", Json::Num(self.min_ns() as f64)),
+            ("max_ns", Json::Num(self.max_ns as f64)),
+            ("p50_ns", Json::Num(self.quantile_ns(0.50) as f64)),
+            ("p95_ns", Json::Num(self.quantile_ns(0.95) as f64)),
+            ("p99_ns", Json::Num(self.quantile_ns(0.99) as f64)),
+            ("buckets", Json::Arr(sparse)),
+        ])
+    }
+
+    /// Rebuild from [`Self::to_json`] output (derived percentiles are
+    /// recomputed, not trusted).
+    pub fn from_json(j: &Json) -> anyhow::Result<Hist> {
+        use anyhow::Context;
+        let mut h = Hist {
+            count: j.get("count").as_f64().context("hist 'count'")? as u64,
+            sum_ns: j.get("sum_ns").as_f64().context("hist 'sum_ns'")? as u64,
+            min_ns: j.get("min_ns").as_f64().context("hist 'min_ns'")? as u64,
+            max_ns: j.get("max_ns").as_f64().context("hist 'max_ns'")? as u64,
+            buckets: [0; BUCKETS],
+        };
+        if h.count == 0 {
+            h.min_ns = u64::MAX;
+        }
+        for pair in j.get("buckets").as_arr().context("hist 'buckets'")? {
+            let i = pair.at(0).as_usize().context("bucket index")?;
+            let n = pair.at(1).as_f64().context("bucket count")? as u64;
+            anyhow::ensure!(i < BUCKETS, "bucket index {i} out of range");
+            h.buckets[i] = n;
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn record_and_quantiles() {
+        let mut h = Hist::new();
+        for ns in [100u64, 200, 300, 400, 10_000] {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min_ns(), 100);
+        assert_eq!(h.max_ns(), 10_000);
+        assert_eq!(h.sum_ns(), 11_000);
+        // p50 lands in the bucket of 200/300 (128..255 or 256..511)
+        let p50 = h.quantile_ns(0.5);
+        assert!((100..=511).contains(&p50), "p50={p50}");
+        assert_eq!(h.quantile_ns(1.0), 10_000, "p100 is the exact max");
+        assert!(h.quantile_ns(0.0) >= 100);
+    }
+
+    #[test]
+    fn empty_hist_is_quiet() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min_ns(), 0);
+        assert_eq!(h.max_ns(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.quantile_ns(0.99), 0);
+    }
+
+    #[test]
+    fn merge_is_commutative() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        for ns in [10u64, 1000, 50_000] {
+            a.record(ns);
+        }
+        for ns in [7u64, 7, 2_000_000] {
+            b.record(ns);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.count(), 6);
+        assert_eq!(ab.count(), ba.count());
+        assert_eq!(ab.sum_ns(), ba.sum_ns());
+        assert_eq!(ab.min_ns(), 7);
+        assert_eq!(ab.max_ns(), 2_000_000);
+        assert_eq!(ab.quantile_ns(0.5), ba.quantile_ns(0.5));
+    }
+
+    #[test]
+    fn diff_removes_earlier_counts() {
+        let mut earlier = Hist::new();
+        earlier.record(100);
+        let mut later = earlier.clone();
+        later.record(100);
+        later.record(3000);
+        let d = later.diff(&earlier);
+        assert_eq!(d.count(), 2);
+        assert_eq!(d.sum_ns(), 3100);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut h = Hist::new();
+        for ns in [5u64, 80, 80, 12_345, 999_999_999] {
+            h.record(ns);
+        }
+        let j = h.to_json();
+        let back = Hist::from_json(&j).unwrap();
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.sum_ns(), h.sum_ns());
+        assert_eq!(back.min_ns(), h.min_ns());
+        assert_eq!(back.max_ns(), h.max_ns());
+        assert_eq!(back.quantile_ns(0.95), h.quantile_ns(0.95));
+        // empty hist round-trips too
+        let e = Hist::from_json(&Hist::new().to_json()).unwrap();
+        assert_eq!(e.count(), 0);
+        assert_eq!(e.min_ns(), 0);
+    }
+}

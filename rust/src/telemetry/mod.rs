@@ -1,0 +1,479 @@
+//! Lightweight, zero-dependency instrumentation: spans, counters, and an
+//! optional JSONL trace sink.
+//!
+//! The training stack runs single-threaded per run ([`crate::runtime::Runtime`]
+//! is not `Send`), so telemetry follows the same shape as the old
+//! `literal_builds`/`host_transfers` counters it absorbs: every thread owns a
+//! private [`Registry`] (a thread-local; no locks or atomics on the hot path)
+//! and cross-thread aggregation is explicit — a sweep worker finishes,
+//! captures a [`Snapshot`], and the coordinator [`absorb`]s the snapshots in
+//! worker-index order.  Counter addition and histogram bucket addition are
+//! commutative, so serial, threaded, and sharded sweeps report identical
+//! merged totals (pinned by `tests/sharding_equivalence.rs`).
+//!
+//! Three primitives:
+//!
+//! - **Counters** — monotonic event counts (`telemetry::count("watchdog.trips",
+//!   1)`); [`gauge`] overwrites instead of adding for level-style values.
+//!   The counter catalog lives in ROADMAP.md's observability section.
+//! - **Spans** — RAII timers: `let _s = telemetry::span!("engine.step");`
+//!   records the scope's wall duration into a per-name log2 histogram
+//!   ([`Hist`]) on drop.  With no trace sink attached the cost is two
+//!   `Instant` reads plus a thread-local map bump.
+//! - **Trace sink** — [`TraceGuard::attach`] (CLI `--trace <path>` / config
+//!   `telemetry.trace_path`) streams every span end and counter bump as one
+//!   JSON object per line, stamped with the current training iteration
+//!   ([`set_iter`]) and the wall offset since attach.  `repro trace
+//!   summarize <file>` ([`trace`]) renders the per-phase timing table.
+//!
+//! Per-run [`Snapshot`] deltas land in
+//! [`crate::metrics::History::summary_json`] under `"telemetry"`, so every
+//! recorded experiment carries its own counter/phase audit trail.
+
+pub mod hist;
+pub mod trace;
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub use hist::Hist;
+
+/// One thread's counters and span histograms.
+#[derive(Debug, Clone, Default)]
+struct Registry {
+    counters: BTreeMap<String, u64>,
+    spans: BTreeMap<String, Hist>,
+}
+
+thread_local! {
+    static REGISTRY: RefCell<Registry> = RefCell::new(Registry::default());
+    /// Training iteration stamped onto trace events (see [`set_iter`]).
+    static ITER: Cell<u64> = const { Cell::new(0) };
+    static SINK: RefCell<Option<TraceSink>> = const { RefCell::new(None) };
+}
+
+// --------------------------------------------------------------- counters
+
+/// Add `n` to counter `name` (creating it at zero first).  Names are
+/// dot-separated static identifiers (`"runtime.host_transfers"`); keep them
+/// free of quotes/backslashes — the trace sink writes them unescaped.
+pub fn count(name: &str, n: u64) {
+    if n == 0 {
+        return;
+    }
+    let total = REGISTRY.with(|r| {
+        let mut reg = r.borrow_mut();
+        let slot = reg.counters.entry(name.to_string()).or_insert(0);
+        *slot += n;
+        *slot
+    });
+    trace_count(name, n, total);
+}
+
+/// Overwrite counter `name` with an absolute level (gauge semantics).
+pub fn gauge(name: &str, value: u64) {
+    REGISTRY.with(|r| {
+        r.borrow_mut().counters.insert(name.to_string(), value);
+    });
+    trace_count(name, 0, value);
+}
+
+/// Current value of counter `name` on this thread (0 if never bumped).
+pub fn counter(name: &str) -> u64 {
+    REGISTRY.with(|r| r.borrow().counters.get(name).copied().unwrap_or(0))
+}
+
+/// Stamp the training iteration onto subsequent trace events.
+pub fn set_iter(iter: u64) {
+    ITER.with(|i| i.set(iter));
+}
+
+// ------------------------------------------------------------------ spans
+
+/// RAII span: created by [`start_span`] / `telemetry::span!`, records its
+/// wall duration into the per-name histogram when dropped.
+pub struct Span {
+    name: &'static str,
+    start: Instant,
+}
+
+/// Start timing a named phase.  Bind the result (`let _s = ...`) — an
+/// unnamed `_` drops immediately and times nothing.
+pub fn start_span(name: &'static str) -> Span {
+    Span { name, start: Instant::now() }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let ns = self.start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        REGISTRY.with(|r| {
+            r.borrow_mut().spans.entry(self.name.to_string()).or_default().record(ns)
+        });
+        trace_span(self.name, ns);
+    }
+}
+
+/// `telemetry::span!("engine.step")` — see [`start_span`].
+#[macro_export]
+macro_rules! telemetry_span {
+    ($name:expr) => {
+        $crate::telemetry::start_span($name)
+    };
+}
+pub use crate::telemetry_span as span;
+
+// -------------------------------------------------------------- snapshots
+
+/// A point-in-time copy of one registry: `Send + Clone`, mergeable, and
+/// JSON round-trippable.  Captured per worker by the sweep coordinator and
+/// per run by [`crate::trainer::Session`].
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    counters: BTreeMap<String, u64>,
+    spans: BTreeMap<String, Hist>,
+}
+
+impl Snapshot {
+    pub fn counters(&self) -> &BTreeMap<String, u64> {
+        &self.counters
+    }
+
+    pub fn spans(&self) -> &BTreeMap<String, Hist> {
+        &self.spans
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.spans.is_empty()
+    }
+
+    /// What happened since `earlier` (counter-wise and bucket-wise
+    /// subtraction; zero entries are dropped so deltas stay sparse).
+    pub fn diff(&self, earlier: &Snapshot) -> Snapshot {
+        let mut out = Snapshot::default();
+        for (k, &v) in &self.counters {
+            let d = v.saturating_sub(earlier.counter(k));
+            if d > 0 {
+                out.counters.insert(k.clone(), d);
+            }
+        }
+        for (k, h) in &self.spans {
+            let d = match earlier.spans.get(k) {
+                Some(e) => h.diff(e),
+                None => h.clone(),
+            };
+            if d.count() > 0 {
+                out.spans.insert(k.clone(), d);
+            }
+        }
+        out
+    }
+
+    /// Fold `other` into `self` (commutative totals — see module docs).
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (k, &v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &other.spans {
+            self.spans.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                .collect(),
+        );
+        let spans = Json::Obj(
+            self.spans
+                .iter()
+                .map(|(k, h)| (k.clone(), h.to_json()))
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("spans", spans)])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Snapshot> {
+        let mut out = Snapshot::default();
+        if let Some(m) = j.get("counters").as_obj() {
+            for (k, v) in m {
+                out.counters
+                    .insert(k.clone(), v.as_f64().context("counter value")? as u64);
+            }
+        }
+        if let Some(m) = j.get("spans").as_obj() {
+            for (k, v) in m {
+                out.spans.insert(
+                    k.clone(),
+                    Hist::from_json(v).with_context(|| format!("span '{k}'"))?,
+                );
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Copy this thread's registry (counters + span histograms).
+pub fn snapshot() -> Snapshot {
+    REGISTRY.with(|r| {
+        let reg = r.borrow();
+        Snapshot { counters: reg.counters.clone(), spans: reg.spans.clone() }
+    })
+}
+
+/// Merge a snapshot into this thread's registry — how the sweep coordinator
+/// adopts its workers' telemetry (call in worker-index order; totals are
+/// order-independent anyway).
+pub fn absorb(snap: &Snapshot) {
+    REGISTRY.with(|r| {
+        let mut reg = r.borrow_mut();
+        for (k, &v) in &snap.counters {
+            *reg.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &snap.spans {
+            reg.spans.entry(k.clone()).or_default().merge(h);
+        }
+    });
+}
+
+// ------------------------------------------------------------- trace sink
+
+struct TraceSink {
+    w: std::io::BufWriter<std::fs::File>,
+    start: Instant,
+}
+
+/// Open a JSONL trace sink on this thread; subsequent span/counter events
+/// stream to it until [`detach_trace`].  Replaces any sink already attached.
+pub fn attach_trace(path: &str) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let f = std::fs::File::create(path).with_context(|| format!("opening trace {path}"))?;
+    SINK.with(|s| {
+        *s.borrow_mut() = Some(TraceSink { w: std::io::BufWriter::new(f), start: Instant::now() })
+    });
+    Ok(())
+}
+
+/// Flush and close this thread's trace sink (no-op when none is attached).
+pub fn detach_trace() {
+    SINK.with(|s| {
+        if let Some(mut sink) = s.borrow_mut().take() {
+            let _ = sink.w.flush();
+        }
+    });
+}
+
+/// Is a trace sink attached on this thread?
+pub fn trace_active() -> bool {
+    SINK.with(|s| s.borrow().is_some())
+}
+
+fn trace_span(name: &str, ns: u64) {
+    SINK.with(|s| {
+        if let Some(sink) = s.borrow_mut().as_mut() {
+            let t = sink.start.elapsed().as_secs_f64();
+            let iter = ITER.with(|i| i.get());
+            let _ = writeln!(
+                sink.w,
+                r#"{{"t":{t:.6},"kind":"span","name":"{name}","iter":{iter},"dur_us":{:.3}}}"#,
+                ns as f64 / 1e3
+            );
+        }
+    });
+}
+
+fn trace_count(name: &str, n: u64, total: u64) {
+    SINK.with(|s| {
+        if let Some(sink) = s.borrow_mut().as_mut() {
+            let t = sink.start.elapsed().as_secs_f64();
+            let iter = ITER.with(|i| i.get());
+            let _ = writeln!(
+                sink.w,
+                r#"{{"t":{t:.6},"kind":"count","name":"{name}","iter":{iter},"n":{n},"total":{total}}}"#
+            );
+        }
+    });
+}
+
+/// RAII wrapper for an optional trace sink: attaches on construction (a
+/// failed open warns and traces nothing — observability must never kill a
+/// run), detaches and flushes on drop.
+pub struct TraceGuard {
+    active: bool,
+}
+
+impl TraceGuard {
+    pub fn attach(path: Option<&str>) -> TraceGuard {
+        match path {
+            Some(p) => match attach_trace(p) {
+                Ok(()) => {
+                    crate::log_info!("telemetry: tracing to {p}");
+                    TraceGuard { active: true }
+                }
+                Err(e) => {
+                    crate::log_warn!("telemetry: trace disabled ({e:#})");
+                    TraceGuard { active: false }
+                }
+            },
+            None => TraceGuard { active: false },
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        self.active
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        if self.active {
+            detach_trace();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_per_thread() {
+        let before = counter("test.alpha");
+        count("test.alpha", 2);
+        count("test.alpha", 3);
+        count("test.alpha", 0); // no-op, not even an entry
+        assert_eq!(counter("test.alpha"), before + 5);
+        gauge("test.level", 42);
+        gauge("test.level", 7);
+        assert_eq!(counter("test.level"), 7, "gauge overwrites");
+    }
+
+    #[test]
+    fn spans_feed_histograms() {
+        let before = snapshot().spans().get("test.span").map(|h| h.count()).unwrap_or(0);
+        {
+            let _s = span!("test.span");
+            std::hint::black_box(0u64);
+        }
+        {
+            let _s = start_span("test.span");
+        }
+        let snap = snapshot();
+        let h = snap.spans().get("test.span").expect("span recorded");
+        assert_eq!(h.count(), before + 2);
+        assert!(h.max_ns() > 0 || h.count() > 0);
+    }
+
+    #[test]
+    fn snapshot_diff_and_merge() {
+        count("test.diff", 10);
+        let a = snapshot();
+        count("test.diff", 4);
+        {
+            let _s = span!("test.diff_span");
+        }
+        let b = snapshot();
+        let d = b.diff(&a);
+        assert_eq!(d.counter("test.diff"), 4);
+        assert_eq!(d.spans().get("test.diff_span").map(|h| h.count()), Some(1));
+        assert_eq!(d.counter("test.never"), 0);
+
+        let mut merged = d.clone();
+        merged.merge(&d);
+        assert_eq!(merged.counter("test.diff"), 8);
+        assert_eq!(merged.spans()["test.diff_span"].count(), 2);
+    }
+
+    #[test]
+    fn absorb_is_order_independent() {
+        let mut a = Snapshot::default();
+        a.counters.insert("x".into(), 3);
+        let mut b = Snapshot::default();
+        b.counters.insert("x".into(), 5);
+        b.counters.insert("y".into(), 1);
+
+        let base = snapshot();
+        absorb(&a);
+        absorb(&b);
+        let ab = snapshot().diff(&base);
+        assert_eq!(ab.counter("x"), 8);
+        assert_eq!(ab.counter("y"), 1);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip() {
+        let mut s = Snapshot::default();
+        s.counters.insert("runtime.host_transfers".into(), 12);
+        s.counters.insert("watchdog.trips".into(), 2);
+        let mut h = Hist::new();
+        for ns in [1_000u64, 2_000, 3_000_000] {
+            h.record(ns);
+        }
+        s.spans.insert("engine.step".into(), h);
+
+        let text = s.to_json().to_string_pretty();
+        let back = Snapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.counter("runtime.host_transfers"), 12);
+        assert_eq!(back.counter("watchdog.trips"), 2);
+        let hb = &back.spans()["engine.step"];
+        assert_eq!(hb.count(), 3);
+        assert_eq!(hb.min_ns(), 1_000);
+        assert_eq!(hb.max_ns(), 3_000_000);
+    }
+
+    #[test]
+    fn trace_sink_streams_jsonl() {
+        let dir = std::env::temp_dir().join("qedps_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let pathstr = path.to_string_lossy().into_owned();
+        {
+            let guard = TraceGuard::attach(Some(&pathstr));
+            assert!(guard.active());
+            assert!(trace_active());
+            set_iter(7);
+            count("test.trace_counter", 3);
+            {
+                let _s = span!("test.trace_span");
+            }
+        }
+        assert!(!trace_active(), "guard detaches on drop");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let j = Json::parse(line).expect("each line is standalone JSON");
+            assert_eq!(j.get("iter").as_f64(), Some(7.0));
+        }
+        let j0 = Json::parse(lines[0]).unwrap();
+        assert_eq!(j0.get("kind").as_str(), Some("count"));
+        assert_eq!(j0.get("name").as_str(), Some("test.trace_counter"));
+        assert_eq!(j0.get("n").as_f64(), Some(3.0));
+        let j1 = Json::parse(lines[1]).unwrap();
+        assert_eq!(j1.get("kind").as_str(), Some("span"));
+        assert!(j1.get("dur_us").as_f64().is_some());
+    }
+
+    #[test]
+    fn missing_trace_dir_is_nonfatal() {
+        let guard = TraceGuard::attach(Some("/dev/null/nope/trace.jsonl"));
+        assert!(!guard.active(), "unwritable path disables tracing");
+        let none = TraceGuard::attach(None);
+        assert!(!none.active());
+    }
+}

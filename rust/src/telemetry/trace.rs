@@ -1,0 +1,280 @@
+//! Offline analysis of JSONL trace files (`repro trace summarize <file>`).
+//!
+//! The trace sink ([`super::TraceGuard`]) writes one JSON object per line;
+//! this module reads a file back, folds span events into exact per-phase
+//! duration stats (the raw durations are kept, so percentiles here are
+//! exact rather than log2-bucketed) and counter events into (delta, final
+//! total) pairs, and renders the result as an aligned text table.
+//! Malformed lines are counted and skipped — a trace truncated by a crash
+//! must still summarize, that is half the point of tracing.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Exact duration stats for one span name.
+#[derive(Debug, Clone, Default)]
+pub struct SpanStats {
+    /// Microsecond durations in arrival order.
+    durs_us: Vec<f64>,
+    first_iter: u64,
+    last_iter: u64,
+}
+
+impl SpanStats {
+    pub fn count(&self) -> usize {
+        self.durs_us.len()
+    }
+
+    pub fn sum_us(&self) -> f64 {
+        self.durs_us.iter().sum()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.durs_us.is_empty() {
+            0.0
+        } else {
+            self.sum_us() / self.durs_us.len() as f64
+        }
+    }
+
+    pub fn min_us(&self) -> f64 {
+        if self.durs_us.is_empty() {
+            0.0
+        } else {
+            self.durs_us.iter().copied().fold(f64::INFINITY, f64::min)
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.durs_us.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Exact quantile by nearest-rank on the sorted durations.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.durs_us.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.durs_us.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize).max(1);
+        sorted[rank - 1]
+    }
+
+    pub fn iter_range(&self) -> (u64, u64) {
+        (self.first_iter, self.last_iter)
+    }
+}
+
+/// Delta and final running total for one counter name.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CounterStats {
+    pub delta: u64,
+    pub last_total: u64,
+}
+
+/// Aggregated view of one trace file.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSummary {
+    pub spans: BTreeMap<String, SpanStats>,
+    pub counters: BTreeMap<String, CounterStats>,
+    /// Well-formed events consumed.
+    pub events: usize,
+    /// Lines that failed to parse or lacked required fields.
+    pub skipped: usize,
+    /// Wall offset of the last event (seconds since the sink attached).
+    pub wall_s: f64,
+}
+
+impl TraceSummary {
+    /// Fold one already-parsed trace event into the summary.  Returns
+    /// `false` (and leaves the summary untouched except `skipped`) when the
+    /// event is missing required fields.
+    fn absorb_event(&mut self, j: &Json) -> bool {
+        let (Some(kind), Some(name)) = (j.get("kind").as_str(), j.get("name").as_str()) else {
+            return false;
+        };
+        let iter = j.get("iter").as_f64().unwrap_or(0.0) as u64;
+        match kind {
+            "span" => {
+                let Some(dur) = j.get("dur_us").as_f64() else {
+                    return false;
+                };
+                let s = self.spans.entry(name.to_string()).or_default();
+                if s.durs_us.is_empty() {
+                    s.first_iter = iter;
+                }
+                s.last_iter = iter;
+                s.durs_us.push(dur);
+            }
+            "count" => {
+                let Some(total) = j.get("total").as_f64() else {
+                    return false;
+                };
+                let n = j.get("n").as_f64().unwrap_or(0.0) as u64;
+                let c = self.counters.entry(name.to_string()).or_default();
+                c.delta += n;
+                c.last_total = total as u64;
+            }
+            _ => return false,
+        }
+        if let Some(t) = j.get("t").as_f64() {
+            self.wall_s = self.wall_s.max(t);
+        }
+        self.events += 1;
+        true
+    }
+
+    /// Parse a full JSONL trace body (already read into memory).
+    pub fn from_jsonl(text: &str) -> TraceSummary {
+        let mut out = TraceSummary::default();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            match Json::parse(line) {
+                Ok(j) => {
+                    if !out.absorb_event(&j) {
+                        out.skipped += 1;
+                    }
+                }
+                Err(_) => out.skipped += 1,
+            }
+        }
+        out
+    }
+
+    /// Human-readable report: per-phase timing table + counter deltas.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace: {} events over {:.3}s wall ({} malformed line{} skipped)\n",
+            self.events,
+            self.wall_s,
+            self.skipped,
+            if self.skipped == 1 { "" } else { "s" }
+        ));
+
+        out.push_str("\nspans (us):\n");
+        if self.spans.is_empty() {
+            out.push_str("  (none)\n");
+        } else {
+            out.push_str(&format!(
+                "  {:<22} {:>8} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}\n",
+                "phase", "count", "total_ms", "mean", "min", "p50", "p95", "max"
+            ));
+            out.push_str(&format!("  {}\n", "-".repeat(108)));
+            for (name, s) in &self.spans {
+                out.push_str(&format!(
+                    "  {:<22} {:>8} {:>12.3} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.1}\n",
+                    name,
+                    s.count(),
+                    s.sum_us() / 1e3,
+                    s.mean_us(),
+                    s.min_us(),
+                    s.quantile_us(0.50),
+                    s.quantile_us(0.95),
+                    s.max_us(),
+                ));
+            }
+        }
+
+        out.push_str("\ncounters:\n");
+        if self.counters.is_empty() {
+            out.push_str("  (none)\n");
+        } else {
+            out.push_str(&format!(
+                "  {:<28} {:>12} {:>12}\n",
+                "counter", "delta", "final"
+            ));
+            out.push_str(&format!("  {}\n", "-".repeat(54)));
+            for (name, c) in &self.counters {
+                out.push_str(&format!(
+                    "  {:<28} {:>12} {:>12}\n",
+                    name, c.delta, c.last_total
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Read and summarize a trace file written by the JSONL sink.
+pub fn summarize(path: &str) -> Result<TraceSummary> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    Ok(TraceSummary::from_jsonl(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+{"t":0.000100,"kind":"count","name":"runtime.host_transfers","iter":0,"n":4,"total":4}
+{"t":0.000200,"kind":"span","name":"engine.step","iter":0,"dur_us":120.500}
+{"t":0.000300,"kind":"span","name":"engine.step","iter":1,"dur_us":80.000}
+{"t":0.000400,"kind":"span","name":"engine.step","iter":2,"dur_us":100.000}
+{"t":0.000500,"kind":"span","name":"session.eval","iter":2,"dur_us":900.000}
+{"t":0.000600,"kind":"count","name":"runtime.host_transfers","iter":2,"n":2,"total":6}
+{"t":0.000700,"kind":"count","name":"eval.batches","iter":2,"n":5,"total":5}
+this line is not json
+{"t":0.000800,"kind":"mystery","name":"x"}
+"#;
+
+    #[test]
+    fn summarize_folds_spans_and_counters() {
+        let s = TraceSummary::from_jsonl(SAMPLE);
+        assert_eq!(s.events, 7);
+        assert_eq!(s.skipped, 2, "garbage line + unknown kind");
+        assert!((s.wall_s - 0.0007).abs() < 1e-9);
+
+        let step = &s.spans["engine.step"];
+        assert_eq!(step.count(), 3);
+        assert!((step.sum_us() - 300.5).abs() < 1e-9);
+        assert_eq!(step.iter_range(), (0, 2));
+        assert!((step.min_us() - 80.0).abs() < 1e-9);
+        assert!((step.max_us() - 120.5).abs() < 1e-9);
+        assert!((step.quantile_us(0.5) - 100.0).abs() < 1e-9, "exact median");
+        assert!((step.quantile_us(1.0) - 120.5).abs() < 1e-9);
+
+        let ht = &s.counters["runtime.host_transfers"];
+        assert_eq!(ht.delta, 6);
+        assert_eq!(ht.last_total, 6);
+        assert_eq!(s.counters["eval.batches"].delta, 5);
+    }
+
+    #[test]
+    fn render_names_every_phase_and_counter() {
+        let s = TraceSummary::from_jsonl(SAMPLE);
+        let text = s.render();
+        for needle in
+            ["engine.step", "session.eval", "runtime.host_transfers", "eval.batches", "p95"]
+        {
+            assert!(text.contains(needle), "report missing '{needle}':\n{text}");
+        }
+    }
+
+    #[test]
+    fn empty_trace_summarizes_quietly() {
+        let s = TraceSummary::from_jsonl("");
+        assert_eq!(s.events, 0);
+        assert_eq!(s.skipped, 0);
+        let text = s.render();
+        assert!(text.contains("(none)"));
+    }
+
+    #[test]
+    fn summarize_reads_from_disk() {
+        let dir = std::env::temp_dir().join("qedps_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        std::fs::write(&path, SAMPLE).unwrap();
+        let s = summarize(&path.to_string_lossy()).unwrap();
+        assert_eq!(s.events, 7);
+        assert!(summarize("/nonexistent/trace.jsonl").is_err());
+    }
+}

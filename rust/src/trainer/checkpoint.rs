@@ -167,6 +167,7 @@ pub fn save_state(
     write_synced(&latest_tmp, iter.to_string().as_bytes())?;
     std::fs::rename(&latest_tmp, dirp.join("LATEST"))?;
     crate::log_debug!("checkpoint: saved iter {iter} to {}", step_dir.display());
+    crate::telemetry::count("checkpoint.saves", 1);
     Ok(())
 }
 
@@ -247,6 +248,7 @@ pub fn gc(dir: &str, keep: u64) -> Result<usize> {
         crate::log_debug!("checkpoint: pruned {}", step_dir.display());
         pruned += 1;
     }
+    crate::telemetry::count("checkpoint.gc_pruned", pruned as u64);
     Ok(pruned)
 }
 

@@ -320,13 +320,22 @@ impl StepEngine {
     /// in device mode — zero state transfers: last step's output buffers
     /// are this step's inputs.
     pub fn step(&mut self, iter: u64, lr: f32, prec: &PrecState) -> Result<RawStep> {
-        self.x_in.fill(&self.x_buf)?;
-        self.y_in.fill(&self.y_buf)?;
-        self.lr_in.set_scalar(lr)?;
-        self.seed_in.set_scalar((iter + 1) as f32)?;
-        self.sync_prec(prec)?;
-        self.ensure_prec_dev()?;
+        let _step = crate::telemetry::span!("engine.step");
+        crate::telemetry::count("engine.steps", 1);
+        {
+            let _s = crate::telemetry::span!("engine.refill");
+            self.x_in.fill(&self.x_buf)?;
+            self.y_in.fill(&self.y_buf)?;
+            self.lr_in.set_scalar(lr)?;
+            self.seed_in.set_scalar((iter + 1) as f32)?;
+        }
+        {
+            let _s = crate::telemetry::span!("engine.quantize");
+            self.sync_prec(prec)?;
+            self.ensure_prec_dev()?;
+        }
 
+        let _exec_span = crate::telemetry::span!("engine.exec");
         let exec = match &self.state {
             ParamState::Device(ds) => {
                 let x = DeviceBuf::from_literal(&self.client, self.x_in.literal())?;
@@ -372,7 +381,9 @@ impl StepEngine {
                 StepExec::HostOut { outs, fallback: false }
             }
         };
+        drop(_exec_span);
 
+        let _readback_span = crate::telemetry::span!("engine.readback");
         let (loss, acc, evec, rvec) = match exec {
             StepExec::DeviceOut(mut bufs) => {
                 anyhow::ensure!(
@@ -425,6 +436,7 @@ impl StepEngine {
                 (loss, acc, evec, rvec)
             }
         };
+        drop(_readback_span);
         anyhow::ensure!(evec.len() == self.evec_len, "evec length");
 
         Ok(RawStep {
@@ -493,6 +505,8 @@ impl StepEngine {
         let mut acc = EvalAccum::new();
         let mut warned = false;
         while let Some(valid) = eb.next_into(&mut self.ex_buf, &mut self.ey_buf) {
+            let _s = crate::telemetry::span!("engine.eval_batch");
+            crate::telemetry::count("eval.batches", 1);
             self.ex_in.fill(&self.ex_buf)?;
             self.ey_in.fill(&self.ey_buf)?;
             let outs = self.run_eval()?;

@@ -86,6 +86,12 @@ impl Session {
     /// retries, and deterministic batch-stream replay.
     pub fn run(self, rt: &mut Runtime) -> Result<History> {
         let Session { cfg, mut trainer, train, test, injector } = self;
+        // JSONL tracing is per-run: attach if configured, flush on every
+        // exit path (the guard detaches on drop, including error returns).
+        let _trace = crate::telemetry::TraceGuard::attach(cfg.trace_path.as_deref());
+        // The registry is thread-accumulated; diff against this baseline so
+        // the history carries only this run's telemetry.
+        let telemetry_base = crate::telemetry::snapshot();
         let mut batcher = Batcher::new(&train, trainer.train_batch_size(), cfg.seed);
         let ckpt_dir = cfg.checkpoint_dir.clone();
 
@@ -124,6 +130,7 @@ impl Session {
         let mut retries: u64 = 0;
 
         while iter < cfg.iters {
+            crate::telemetry::set_iter(iter);
             {
                 let mut inj = injector.borrow_mut();
                 if let Some(class) = inj.bitflip(iter) {
@@ -206,6 +213,8 @@ impl Session {
                     }
                     // Roll back: newest complete checkpoint, else a fresh
                     // initialization; then escalate precision and replay.
+                    let _s = crate::telemetry::span!("session.rollback");
+                    crate::telemetry::count("session.rollbacks", 1);
                     let restored = match ckpt_dir.as_deref() {
                         Some(d) => match checkpoint::load_latest(d, &mut trainer) {
                             Ok(next) => Some(next),
@@ -262,6 +271,7 @@ impl Session {
             }
 
             if (cfg.eval_every > 0 && iter % cfg.eval_every == 0 && iter > 0) || last {
+                let _s = crate::telemetry::span!("session.eval");
                 let (tl, ta) = trainer.evaluate(&test)?;
                 trainer.history.eval.push(EvalRecord {
                     iter,
@@ -281,6 +291,7 @@ impl Session {
                     && iter > 0
                     && (iter % cfg.checkpoint_every == 0 || last)
                 {
+                    let _s = crate::telemetry::span!("session.checkpoint");
                     checkpoint::save(dir, &trainer, iter)?;
                     // GC never fails a healthy run — a prune error is noise
                     // compared to losing the training job.
@@ -295,6 +306,7 @@ impl Session {
             }
             iter += 1;
         }
+        trainer.history.telemetry = Some(crate::telemetry::snapshot().diff(&telemetry_base));
         Ok(trainer.history)
     }
 }

@@ -5,7 +5,7 @@
 //! timing is readable in experiment logs.
 
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Once, OnceLock};
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -23,13 +23,36 @@ static START: OnceLock<Instant> = OnceLock::new();
 pub fn init() {
     START.get_or_init(Instant::now);
     if let Ok(v) = std::env::var("QEDPS_LOG") {
-        set_level(match v.to_ascii_lowercase().as_str() {
-            "error" => Level::Error,
-            "warn" => Level::Warn,
-            "debug" => Level::Debug,
-            "trace" => Level::Trace,
-            _ => Level::Info,
-        });
+        match parse_level(&v) {
+            Some(l) => set_level(l),
+            None => {
+                // an unrecognized value still runs at the default level, but
+                // never silently: say once what was rejected and what works
+                static WARNED: Once = Once::new();
+                WARNED.call_once(|| {
+                    log(
+                        Level::Warn,
+                        format_args!(
+                            "QEDPS_LOG={v:?} is not a level \
+                             (accepted: error|warn|info|debug|trace); using info"
+                        ),
+                    );
+                });
+                set_level(Level::Info);
+            }
+        }
+    }
+}
+
+/// Parse a `QEDPS_LOG` value; `None` for anything outside the accepted set.
+pub fn parse_level(v: &str) -> Option<Level> {
+    match v.to_ascii_lowercase().as_str() {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
     }
 }
 
@@ -54,6 +77,27 @@ pub fn log(l: Level, args: std::fmt::Arguments) {
         Level::Trace => "TRACE",
     };
     eprintln!("[{t:9.3}s {tag}] {args}");
+}
+
+/// Product output (tables, figures, reports) — plain stdout, no log
+/// prefix, never level-gated.  All stdout printing funnels through here so
+/// `scripts/tier1.sh`'s print-discipline lint can ban bare `println!` in
+/// library code.
+pub fn out(args: std::fmt::Arguments) {
+    use std::io::Write;
+    let _ = writeln!(std::io::stdout(), "{args}");
+}
+
+/// `crate::out!(...)` — [`out`] with `println!` syntax (empty call prints a
+/// blank line).
+#[macro_export]
+macro_rules! out {
+    () => {
+        $crate::util::logging::out(format_args!(""))
+    };
+    ($($arg:tt)*) => {
+        $crate::util::logging::out(format_args!($($arg)*))
+    };
 }
 
 #[macro_export]
@@ -102,5 +146,17 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn parse_level_accepts_the_documented_set_only() {
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("WARN"), Some(Level::Warn));
+        assert_eq!(parse_level("info"), Some(Level::Info), "info is explicit");
+        assert_eq!(parse_level("Debug"), Some(Level::Debug));
+        assert_eq!(parse_level("trace"), Some(Level::Trace));
+        for bad in ["", "verbose", "infoo", "2", "warning"] {
+            assert_eq!(parse_level(bad), None, "{bad:?} must be rejected");
+        }
     }
 }

@@ -24,7 +24,14 @@ fn sweep_cfg(sub: &str) -> ExperimentConfig {
 }
 
 fn rows_bytes(rows: &[CompareRow]) -> String {
-    compare_rows_json(rows).to_string_pretty()
+    // wall-clock timing columns are machine load, not run content — zero
+    // them so byte-identity only pins the deterministic fields
+    let mut rows = rows.to_vec();
+    for r in &mut rows {
+        r.mean_step_ms = 0.0;
+        r.p95_step_ms = 0.0;
+    }
+    compare_rows_json(&rows).to_string_pretty()
 }
 
 /// Drop the `None` slots a shard filter leaves behind.
@@ -90,6 +97,51 @@ fn two_shard_union_matches_serial() {
     let names: Vec<&str> = merged.iter().map(|r| r.scheme.as_str()).collect();
     assert_eq!(names, schemes, "merged rows must follow scheme order");
     assert_eq!(rows_bytes(&serial), rows_bytes(&merged));
+}
+
+#[test]
+fn telemetry_counters_merge_identically_across_jobs() {
+    // a threaded sweep runs its workers on fresh threads (fresh telemetry
+    // registries); the sharder folds their snapshots back into this thread,
+    // so the merged counter totals must equal a serial sweep's exactly
+    let base = sweep_cfg("telemetry");
+    let schemes = ["qedps", "float"];
+
+    let before = qedps::telemetry::snapshot();
+    coordinator::compare_schemes_sharded(
+        &base,
+        &schemes,
+        &ShardOpts { jobs: 1, shard: None },
+    )
+    .unwrap();
+    let serial = qedps::telemetry::snapshot().diff(&before);
+
+    let before = qedps::telemetry::snapshot();
+    coordinator::compare_schemes_sharded(
+        &base,
+        &schemes,
+        &ShardOpts { jobs: 2, shard: None },
+    )
+    .unwrap();
+    let threaded = qedps::telemetry::snapshot().diff(&before);
+
+    assert!(!serial.is_empty(), "a sweep must record telemetry");
+    assert!(
+        serial.counter("engine.steps") >= base.iters * schemes.len() as u64,
+        "every run's steps must be counted"
+    );
+    assert_eq!(
+        serial.counters(),
+        threaded.counters(),
+        "--jobs 2 must merge to the same counter totals as a serial sweep"
+    );
+    for (name, h) in serial.spans() {
+        assert_eq!(
+            Some(h.count()),
+            threaded.spans().get(name).map(|t| t.count()),
+            "span '{name}' count must survive the worker merge"
+        );
+    }
 }
 
 #[test]

@@ -18,6 +18,19 @@ for arg in "$@"; do
     esac
 done
 
+echo "== tier1: print discipline (library stdout goes through crate::out!) =="
+# Library code must not print directly: stdout belongs to crate::out! (so
+# product output stays greppable/redirectable) and diagnostics belong to
+# the log_* macros.  The CLI entry points and the logger itself are the
+# only legitimate direct printers.
+VIOLATIONS=$(grep -rn --include='*.rs' -E '\b(println|eprintln)!' rust/src \
+    | grep -v -E 'rust/src/(cli\.rs|main\.rs|util/logging\.rs)' || true)
+if [ -n "$VIOLATIONS" ]; then
+    echo "bare println!/eprintln! in library code (use crate::out! / log_* macros):" >&2
+    echo "$VIOLATIONS" >&2
+    exit 1
+fi
+
 echo "== tier1: cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --all -- --check
