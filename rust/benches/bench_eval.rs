@@ -1,0 +1,99 @@
+//! Eval-pass bench: the flat-counter proof behind the cached eval set.
+//!
+//! After one warmup pass per trainer, every timed eval pass must perform
+//! zero literal constructions and zero host→device input uploads
+//! (`device.h2d_input`) — the test set is batched and resident from pass
+//! one.  With device-resident parameters the pass must additionally be
+//! free of state uploads (`device.h2d_state`) and counted host transfers.
+//! The legacy per-pass refill path (`runtime.eval_set = false`) runs
+//! alongside for the removed-cost comparison and must agree bit-for-bit.
+
+use qedps::bench::{black_box, BenchOpts};
+use qedps::config::ExperimentConfig;
+use qedps::data::synth;
+use qedps::runtime::Runtime;
+use qedps::trainer::Trainer;
+
+fn bench_model(rt: &mut Runtime, model: &str) -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = model.into();
+    // not a multiple of the eval batch: the tail-mask path stays exercised
+    let test = synth::generate(333, 6);
+    let opts = BenchOpts { warmup_iters: 0, min_iters: 5, min_time_s: 1.0 };
+
+    let mut cached = Trainer::new(rt, cfg.clone())?;
+    // warmup builds the eval set and uploads each batch's inputs once
+    black_box(cached.evaluate(&test)?);
+    let builds_before = qedps::runtime::literal_builds();
+    let xfers_before = qedps::runtime::host_transfers();
+    let h2d_state_before = qedps::telemetry::counter("device.h2d_state");
+    let h2d_input_before = qedps::telemetry::counter("device.h2d_input");
+    let set_builds_before = qedps::telemetry::counter("eval.set_builds");
+    let cached_pass = qedps::bench::bench_with(
+        &format!("eval/{model}/333-images (cached set)"),
+        &opts,
+        || {
+            black_box(cached.evaluate(&test).unwrap());
+        },
+    );
+
+    // steady-state invariants: the cache makes every timed pass prep-free
+    anyhow::ensure!(
+        qedps::runtime::literal_builds() == builds_before,
+        "eval/{model}: cached-set pass built literals"
+    );
+    anyhow::ensure!(
+        qedps::telemetry::counter("device.h2d_input") == h2d_input_before,
+        "eval/{model}: cached-set pass uploaded input buffers"
+    );
+    anyhow::ensure!(
+        qedps::telemetry::counter("eval.set_builds") == set_builds_before,
+        "eval/{model}: eval set was rebuilt inside the timed loop"
+    );
+    if cached.device_resident() {
+        anyhow::ensure!(
+            qedps::telemetry::counter("device.h2d_state") == h2d_state_before,
+            "eval/{model}: device-resident eval uploaded state"
+        );
+        anyhow::ensure!(
+            qedps::runtime::host_transfers() == xfers_before,
+            "eval/{model}: device-resident eval performed counted host transfers"
+        );
+    }
+
+    // the removed cost: re-batch + re-upload on every pass
+    let mut cfg_refill = cfg.clone();
+    cfg_refill.eval_set = false;
+    let mut refill = Trainer::new(rt, cfg_refill)?;
+    black_box(refill.evaluate(&test)?);
+    let refill_pass = qedps::bench::bench_with(
+        &format!("eval/{model}/333-images (per-pass refill)"),
+        &opts,
+        || {
+            black_box(refill.evaluate(&test).unwrap());
+        },
+    );
+    println!(
+        "eval/{model}: cached set saves {:.1}% of the refill pass",
+        100.0 * (1.0 - cached_pass.mean_ns / refill_pass.mean_ns.max(1e-12))
+    );
+
+    let (cl, ca) = cached.evaluate(&test)?;
+    let (ll, la) = refill.evaluate(&test)?;
+    anyhow::ensure!(
+        cl.to_bits() == ll.to_bits() && ca.to_bits() == la.to_bits(),
+        "eval/{model}: cached set ({cl}, {ca}) != refill ({ll}, {la})"
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    qedps::util::logging::set_level(qedps::util::logging::Level::Warn);
+    let mut rt = Runtime::create()?;
+    println!("== bench_eval (eval-pass latency, flat-counter invariants) ==");
+    for model in ["mlp", "lenet"] {
+        bench_model(&mut rt, model)?;
+    }
+    println!("ok: steady-state eval passes are literal-free and input-upload-free");
+    Ok(())
+}

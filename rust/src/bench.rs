@@ -4,7 +4,12 @@
 //! `name,mean_ns,stddev_ns,min_ns,iters` CSV-ish line for scripting.  Used
 //! by every target in `rust/benches/` (`cargo bench` runs them via
 //! `harness = false`).
+//!
+//! [`EvalBenchReport`] is the machine-readable record behind
+//! `repro bench eval --json`: its key set is pinned by a unit test here so
+//! downstream scripts can rely on the schema.
 
+use crate::util::json::Json;
 use crate::util::{Stopwatch, Summary};
 
 pub struct BenchOpts {
@@ -94,6 +99,59 @@ pub fn bench_with<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchRe
     r
 }
 
+/// Machine-readable record for `repro bench eval --json`.
+///
+/// The counter fields are **deltas across the timed eval loop only**
+/// (warmup passes excluded): a healthy cached-eval steady state reports
+/// `literal_builds == 0` and `h2d_input == 0` on every platform, plus
+/// `h2d_state == 0` and `host_transfers == 0` when the parameter state is
+/// device-resident.
+#[derive(Debug, Clone)]
+pub struct EvalBenchReport {
+    pub model: String,
+    pub scheme: String,
+    /// Timed eval passes (full sweeps over the test set).
+    pub passes: u64,
+    pub batches_per_pass: usize,
+    /// Test-set size (deliberately not a multiple of the eval batch, so the
+    /// tail-mask path is always exercised).
+    pub examples: usize,
+    pub mean_pass_ns: f64,
+    pub stddev_pass_ns: f64,
+    pub min_pass_ns: f64,
+    pub literal_builds: u64,
+    pub h2d_state: u64,
+    pub h2d_input: u64,
+    pub host_transfers: u64,
+    pub device_resident: bool,
+    /// Full telemetry counter/span delta over the timed loop.
+    pub telemetry: Json,
+}
+
+impl EvalBenchReport {
+    /// The pinned `bench eval --json` schema (see `eval_bench_json_schema`
+    /// in this module's tests before renaming anything).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("eval".into())),
+            ("model", Json::Str(self.model.clone())),
+            ("scheme", Json::Str(self.scheme.clone())),
+            ("passes", Json::Num(self.passes as f64)),
+            ("batches_per_pass", Json::Num(self.batches_per_pass as f64)),
+            ("examples", Json::Num(self.examples as f64)),
+            ("mean_pass_ns", Json::Num(self.mean_pass_ns)),
+            ("stddev_pass_ns", Json::Num(self.stddev_pass_ns)),
+            ("min_pass_ns", Json::Num(self.min_pass_ns)),
+            ("literal_builds", Json::Num(self.literal_builds as f64)),
+            ("h2d_state", Json::Num(self.h2d_state as f64)),
+            ("h2d_input", Json::Num(self.h2d_input as f64)),
+            ("host_transfers", Json::Num(self.host_transfers as f64)),
+            ("device_resident", Json::Bool(self.device_resident)),
+            ("telemetry", self.telemetry.clone()),
+        ])
+    }
+}
+
 /// Throughput helper: report elements/s alongside the timing.
 pub fn report_throughput(r: &BenchResult, elems: usize) {
     let eps = elems as f64 / (r.mean_ns / 1e9);
@@ -126,6 +184,56 @@ mod tests {
         assert!(r.iters >= 5);
         assert!(r.mean_ns > 0.0);
         assert!(r.min_ns <= r.mean_ns);
+    }
+
+    #[test]
+    fn eval_bench_json_schema() {
+        // Pin the `bench eval --json` key set the way scripts consume it:
+        // adding a key is fine (extend this list); renaming or dropping one
+        // is a breaking change and must fail here first.
+        let report = EvalBenchReport {
+            model: "mlp".into(),
+            scheme: "qedps".into(),
+            passes: 5,
+            batches_per_pass: 3,
+            examples: 333,
+            mean_pass_ns: 1.5e6,
+            stddev_pass_ns: 2.0e4,
+            min_pass_ns: 1.4e6,
+            literal_builds: 0,
+            h2d_state: 0,
+            h2d_input: 0,
+            host_transfers: 0,
+            device_resident: true,
+            telemetry: Json::obj(vec![]),
+        };
+        let j = report.to_json();
+        let obj = j.as_obj().expect("report serializes to an object");
+        let keys: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            [
+                "batches_per_pass",
+                "bench",
+                "device_resident",
+                "examples",
+                "h2d_input",
+                "h2d_state",
+                "host_transfers",
+                "literal_builds",
+                "mean_pass_ns",
+                "min_pass_ns",
+                "model",
+                "passes",
+                "scheme",
+                "stddev_pass_ns",
+                "telemetry",
+            ],
+            "bench eval --json schema changed"
+        );
+        assert_eq!(obj.get("bench").and_then(|v| v.as_str()), Some("eval"));
+        assert_eq!(obj.get("device_resident").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(obj.get("examples").and_then(|v| v.as_usize()), Some(333));
     }
 
     #[test]

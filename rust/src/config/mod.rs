@@ -81,6 +81,12 @@ pub struct ExperimentConfig {
     /// host-literal path; the engine also falls back automatically when the
     /// platform can't execute against device buffers.
     pub device_params: bool,
+    /// Precompute the eval batches once per test set (pinned x/y literals +
+    /// tail-mask counts, uploaded to resident device buffers on the
+    /// device-params path) so steady-state eval passes perform zero host
+    /// batch prep and zero input uploads.  `false` forces the legacy
+    /// per-batch refill path (the A/B baseline for `repro bench eval`).
+    pub eval_set: bool,
     /// Stream telemetry span/counter events to this JSONL file during the
     /// run (`--trace` / `telemetry.trace_path`); `None` disables the sink.
     pub trace_path: Option<String>,
@@ -123,6 +129,7 @@ impl Default for ExperimentConfig {
             faults: Vec::new(),
             fault_seed: 7,
             device_params: true,
+            eval_set: true,
             trace_path: None,
         }
     }
@@ -241,6 +248,9 @@ impl ExperimentConfig {
             "faults.seed" | "fault_seed" => self.fault_seed = want_u()?,
             "runtime.device_params" | "device_params" => {
                 self.device_params = val.as_bool().context("expected bool")?
+            }
+            "runtime.eval_set" | "eval_set" => {
+                self.eval_set = val.as_bool().context("expected bool")?
             }
             "telemetry.trace_path" | "trace_path" => self.trace_path = Some(want_str()?),
             other => bail!("unknown config key '{other}'"),
@@ -369,6 +379,17 @@ mod tests {
         c.apply_set("device_params=true").unwrap();
         assert!(c.device_params);
         assert!(c.apply_set("device_params=1").is_err(), "wants a bool");
+    }
+
+    #[test]
+    fn eval_set_flag() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.eval_set, "the precomputed eval set is the default");
+        c.apply_set("runtime.eval_set=false").unwrap();
+        assert!(!c.eval_set);
+        c.apply_set("eval_set=true").unwrap();
+        assert!(c.eval_set);
+        assert!(c.apply_set("eval_set=1").is_err(), "wants a bool");
     }
 
     #[test]

@@ -1,0 +1,114 @@
+//! Process-wide dataset cache: parse MNIST (or generate the synthetic
+//! substitute) once per process, not once per run.
+//!
+//! Sweeps dispatch many runs through [`crate::coordinator::sharder`] —
+//! serially, on `--jobs` worker threads, or as subprocess shards — and
+//! every run used to re-read and re-gunzip the same IDX files.  This module
+//! keys loaded `(train, test)` pairs by **resolved source + requested
+//! sizes** and hands out `Arc<Dataset>` clones, so the parse cost is paid
+//! exactly once per process and workers share one allocation.
+//!
+//! Hit/miss traffic is visible as the `data.cache_hits` /
+//! `data.cache_misses` telemetry counters.  The cache sits *below* the
+//! session's retry/fault-injection wrapper on purpose: `read-fail` specs
+//! still fire on every run's load call, and only a successful load is
+//! memoized.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use super::{Dataset, Source};
+
+/// Resolved MNIST directory (the `$MNIST_DIR` fallback chain) plus the
+/// requested `(train_n, test_n)` — everything [`super::load_default`]'s
+/// result depends on.
+type Key = (String, usize, usize);
+
+/// What one cached load holds: shared train/test sets plus their source.
+pub type CachedPair = (Arc<Dataset>, Arc<Dataset>, Source);
+
+static CACHE: Mutex<BTreeMap<Key, CachedPair>> = Mutex::new(BTreeMap::new());
+
+/// Cached [`super::load_default`]: identical resolution semantics, but the
+/// parse happens at most once per process for a given source + size pair.
+pub fn load_default_cached(train_n: usize, test_n: usize) -> CachedPair {
+    let dir = std::env::var("MNIST_DIR").unwrap_or_else(|_| "data/mnist".into());
+    fetch((dir, train_n, test_n), || {
+        let (train, test, source) = super::load_default(train_n, test_n);
+        (Arc::new(train), Arc::new(test), source)
+    })
+}
+
+/// Look `key` up, loading (and memoizing) on a miss.  The lock is held
+/// across the load on purpose: concurrent sweep workers asking for the
+/// same key serialize into exactly one `data.cache_misses` plus `n - 1`
+/// `data.cache_hits` — the deterministic totals the sharding tests pin.
+fn fetch(key: Key, load: impl FnOnce() -> CachedPair) -> CachedPair {
+    let mut map = CACHE.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(hit) = map.get(&key) {
+        crate::telemetry::count("data.cache_hits", 1);
+        crate::log_debug!("data: cache hit ({}, train={}, test={})", key.0, key.1, key.2);
+        return hit.clone();
+    }
+    crate::telemetry::count("data.cache_misses", 1);
+    let entry = load();
+    map.insert(key, entry.clone());
+    entry
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn pair(n: usize, seed: u64) -> CachedPair {
+        (
+            Arc::new(synth::generate(n, seed)),
+            Arc::new(synth::generate(n, seed + 1)),
+            Source::Synthetic { seed },
+        )
+    }
+
+    #[test]
+    fn miss_then_hit_shares_one_load() {
+        let key = ("test://miss_then_hit".to_string(), 3, 3);
+        let miss0 = crate::telemetry::counter("data.cache_misses");
+        let hit0 = crate::telemetry::counter("data.cache_hits");
+        let mut loads = 0;
+        let a = fetch(key.clone(), || {
+            loads += 1;
+            pair(3, 41)
+        });
+        let b = fetch(key, || {
+            loads += 1;
+            pair(3, 99)
+        });
+        assert_eq!(loads, 1, "the second fetch must not reload");
+        assert!(Arc::ptr_eq(&a.0, &b.0), "hits share one allocation");
+        assert!(Arc::ptr_eq(&a.1, &b.1));
+        assert_eq!(a.2, b.2, "the source travels with the cached pair");
+        assert_eq!(crate::telemetry::counter("data.cache_misses"), miss0 + 1);
+        assert_eq!(crate::telemetry::counter("data.cache_hits"), hit0 + 1);
+    }
+
+    #[test]
+    fn distinct_keys_load_independently() {
+        let a = fetch(("test://distinct".into(), 1, 1), || pair(2, 7));
+        let b = fetch(("test://distinct".into(), 2, 1), || pair(2, 8));
+        assert!(!Arc::ptr_eq(&a.0, &b.0), "size is part of the key");
+        assert_ne!(a.2, b.2);
+    }
+
+    #[test]
+    fn load_default_cached_matches_uncached() {
+        // the offline environment resolves to the deterministic synthetic
+        // generator, so a cached load and a direct load must agree
+        let (train, test, source) = load_default_cached(12, 6);
+        let (train2, test2, source2) = crate::data::load_default(12, 6);
+        assert_eq!(train.n, train2.n);
+        assert_eq!(train.labels, train2.labels);
+        assert_eq!(test.n, test2.n);
+        assert_eq!(test.labels, test2.labels);
+        assert_eq!(source, source2);
+    }
+}

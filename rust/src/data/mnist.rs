@@ -5,24 +5,35 @@
 //! u32 per dimension, then raw data.  Images are `0x08` (u8) with 3 dims
 //! `(n, 28, 28)`; labels are `0x08` with 1 dim.
 
-use std::io::Read;
+use std::io::{BufReader, Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use super::{Dataset, IMG_SIDE};
 
+/// Read a file, transparently gunzipping when the 2-byte gzip magic is
+/// present.  The decoder streams straight off a buffered file handle, so
+/// peak memory is one decompressed buffer — not raw + decompressed at once.
 fn read_maybe_gz(path: &Path) -> Result<Vec<u8>> {
-    let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
-    if raw.len() >= 2 && raw[0] == 0x1f && raw[1] == 0x8b {
-        let mut out = Vec::new();
-        flate2::read::GzDecoder::new(&raw[..])
+    let mut file = std::fs::File::open(path).with_context(|| format!("reading {path:?}"))?;
+    let mut magic = [0u8; 2];
+    let sniffed = file
+        .read(&mut magic)
+        .with_context(|| format!("reading {path:?}"))?;
+    file.seek(SeekFrom::Start(0))
+        .with_context(|| format!("reading {path:?}"))?;
+    let mut out = Vec::new();
+    if sniffed == 2 && magic == [0x1f, 0x8b] {
+        flate2::read::GzDecoder::new(BufReader::new(file))
             .read_to_end(&mut out)
             .with_context(|| format!("gunzip {path:?}"))?;
-        Ok(out)
     } else {
-        Ok(raw)
+        BufReader::new(file)
+            .read_to_end(&mut out)
+            .with_context(|| format!("reading {path:?}"))?;
     }
+    Ok(out)
 }
 
 fn be_u32(b: &[u8], off: usize) -> Result<u32> {
@@ -269,5 +280,17 @@ mod tests {
         enc.finish().unwrap();
         let via_gz = read_maybe_gz(&gz_path).unwrap();
         assert_eq!(via_gz, raw);
+    }
+
+    #[test]
+    fn read_maybe_gz_handles_tiny_files() {
+        // shorter than the 2-byte magic sniff: must come back verbatim
+        let dir = std::env::temp_dir().join("qedps_mnist_tiny");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, bytes) in [("empty", &b""[..]), ("one", &b"\x1f"[..])] {
+            let p = dir.join(name);
+            std::fs::write(&p, bytes).unwrap();
+            assert_eq!(read_maybe_gz(&p).unwrap(), bytes);
+        }
     }
 }

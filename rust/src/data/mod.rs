@@ -1,11 +1,13 @@
 //! Data pipeline: dataset container, MNIST IDX(+gz) loader, offline
-//! synthetic-digit substitute, and the shuffling batcher.
+//! synthetic-digit substitute, the shuffling batcher, and a process-wide
+//! dataset cache ([`cache`]) so multi-run sweeps parse MNIST once.
 //!
 //! Resolution order (see [`load_default`]): real MNIST from `$MNIST_DIR`
 //! (or `./data/mnist`) when the IDX files exist, otherwise the synthetic
 //! generator (DESIGN.md substitution #2 — this environment is offline).
 
 pub mod batcher;
+pub mod cache;
 pub mod mnist;
 pub mod synth;
 
@@ -52,6 +54,30 @@ impl Dataset {
             c[l as usize] += 1;
         }
         c
+    }
+
+    /// Cheap content fingerprint: FNV-1a over the size, every label, and a
+    /// strided sample of pixel bit patterns (≈1k probes regardless of set
+    /// size).  Used by the engine's cached eval set to detect that a caller
+    /// swapped datasets between `evaluate()` calls without paying a full
+    /// O(pixels) hash per eval pass.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |b: u64| {
+            h ^= b;
+            h = h.wrapping_mul(PRIME);
+        };
+        mix(self.n as u64);
+        for &l in &self.labels {
+            mix(l as u64);
+        }
+        let stride = (self.images.len() / 1024).max(1);
+        for i in (0..self.images.len()).step_by(stride) {
+            mix(self.images[i].to_bits() as u64);
+        }
+        h
     }
 }
 
@@ -107,5 +133,25 @@ mod tests {
     #[should_panic]
     fn dataset_size_mismatch_panics() {
         Dataset::new(vec![0.0; 10], vec![1, 2]);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_content_sensitive() {
+        let a = synth::generate(25, 11);
+        assert_eq!(a.fingerprint(), a.fingerprint(), "deterministic");
+        assert_eq!(a.fingerprint(), a.clone().fingerprint(), "clone-invariant");
+
+        let b = synth::generate(25, 12);
+        assert_ne!(a.fingerprint(), b.fingerprint(), "different content");
+
+        let mut label_flip = a.clone();
+        label_flip.labels[3] = (label_flip.labels[3] + 1) % NUM_CLASSES as u8;
+        assert_ne!(a.fingerprint(), label_flip.fingerprint(), "label change");
+
+        let mut sized = a.clone();
+        sized.images.truncate(24 * IMG_PIXELS);
+        sized.labels.truncate(24);
+        sized.n = 24;
+        assert_ne!(a.fingerprint(), sized.fingerprint(), "size change");
     }
 }

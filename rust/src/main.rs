@@ -8,6 +8,7 @@
 //! repro rounding-ab [--jobs N] [--shard i/n]        Eq.1 vs Eq.2 A/B
 //! repro macsim   [--model M]                        flexible-MAC speedup table
 //! repro bench step [--model M] [--scheme S] [--json F]  step-loop micro-benchmark
+//! repro bench eval [--model M] [--scheme S] [--json F]  eval-pass micro-benchmark
 //! repro trace summarize <file.jsonl>                analyze a --trace JSONL file
 //! repro ckpt list|verify|prune --checkpoint-dir D   checkpoint maintenance
 //! repro gen-data --out DIR [--n N]                  write synthetic IDX files
@@ -42,7 +43,7 @@ const SPEC: Spec = Spec {
         ("jobs", "N", "worker threads for multi-run sweeps (compare / fig 4 / rounding-ab)"),
         ("shard", "i/n", "run only the i-th of n sweep shards (1-based)"),
         ("trace", "FILE", "stream telemetry span/counter events to this JSONL file"),
-        ("json", "FILE", "write machine-readable results here (for `bench step`)"),
+        ("json", "FILE", "write machine-readable results here (for `bench step` / `bench eval`)"),
     ],
     switches: &[
         ("help", "show usage"),
@@ -50,6 +51,7 @@ const SPEC: Spec = Spec {
         ("resume", "resume from the newest complete checkpoint"),
         ("no-watchdog", "disable the divergence watchdog"),
         ("no-device-params", "keep params host-side (literal upload every step)"),
+        ("no-eval-set", "rebuild eval batches every pass (disable the cached eval set)"),
     ],
 };
 
@@ -93,6 +95,9 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if args.switch("no-device-params") {
         cfg.device_params = false;
+    }
+    if args.switch("no-eval-set") {
+        cfg.eval_set = false;
     }
     if let Some(t) = args.flag("trace") {
         cfg.trace_path = Some(t.into());
@@ -230,6 +235,145 @@ fn bench_step(cfg: &ExperimentConfig, iters: u64, json_out: Option<&str>) -> Res
             }
         }
         std::fs::write(path, j.to_string_pretty())?;
+        println!("wrote bench json -> {path}");
+    }
+    Ok(())
+}
+
+/// `repro bench eval`: the eval-pass micro-benchmark behind the cached
+/// eval set.  After warmup, every timed pass must perform zero literal
+/// constructions and zero host→device input uploads (the set is batched
+/// and resident); with device-resident parameters the pass must also be
+/// free of state uploads and counted host transfers.  The legacy per-pass
+/// refill path is timed alongside as the cost the cache removes, and both
+/// paths must agree bit-for-bit.
+fn bench_eval(cfg: &ExperimentConfig, passes: u64, json_out: Option<&str>) -> Result<()> {
+    use qedps::bench::{bench_with, black_box, BenchOpts, EvalBenchReport};
+    use qedps::runtime::{host_transfers, literal_builds};
+    use qedps::trainer::Trainer;
+
+    let mut rt = Runtime::create()?;
+    // deliberately not a multiple of any eval batch, so the tail-mask
+    // (`valid`) path is always part of what gets timed and asserted
+    let test = qedps::data::synth::generate(333, 6);
+    let mut trainer = Trainer::new(&mut rt, cfg.clone())?;
+    let eval_batch = trainer.eval_batch_size();
+    let batches = test.n.div_ceil(eval_batch);
+
+    println!(
+        "== bench eval: {}/{} ({} examples, batch {eval_batch}, {passes} timed passes) ==",
+        cfg.model, cfg.scheme, test.n
+    );
+
+    // Warm up outside the timed window: the first pass builds the eval set
+    // and uploads each batch's inputs once; the second demonstrates the
+    // steady state the assertions below pin.
+    black_box(trainer.evaluate(&test)?);
+    black_box(trainer.evaluate(&test)?);
+
+    let telemetry_base = qedps::telemetry::snapshot();
+    let builds_before = literal_builds();
+    let xfers_before = host_transfers();
+    let opts = BenchOpts { warmup_iters: 0, min_iters: passes, min_time_s: 0.0 };
+    let pass_r = bench_with(
+        &format!("eval/{}/{} (cached eval set)", cfg.model, cfg.scheme),
+        &opts,
+        || {
+            black_box(trainer.evaluate(&test).unwrap());
+        },
+    );
+    let builds = literal_builds() - builds_before;
+    let xfers = host_transfers() - xfers_before;
+    let delta = qedps::telemetry::snapshot().diff(&telemetry_base);
+    let h2d_state = delta.counter("device.h2d_state");
+    let h2d_input = delta.counter("device.h2d_input");
+
+    println!("literal builds across {} passes: {builds} (target: 0)", pass_r.iters);
+    println!(
+        "input uploads (device.h2d_input) across {} passes: {h2d_input} (target: 0)",
+        pass_r.iters
+    );
+    if trainer.device_resident() {
+        println!(
+            "state uploads (device.h2d_state) across {} passes: {h2d_state} (target: 0)",
+            pass_r.iters
+        );
+    } else {
+        println!(
+            "state uploads (device.h2d_state) across {} passes: {h2d_state} \
+             (host mode re-uploads parameters once per pass)",
+            pass_r.iters
+        );
+    }
+
+    // The cost the cache removes: the legacy path re-batches the test set
+    // and re-uploads the inputs on every pass.
+    let mut legacy_cfg = cfg.clone();
+    legacy_cfg.eval_set = false;
+    let mut legacy = Trainer::new(&mut rt, legacy_cfg)?;
+    black_box(legacy.evaluate(&test)?);
+    bench_with(
+        &format!("eval/{}/{} (per-pass refill, cost removed)", cfg.model, cfg.scheme),
+        &opts,
+        || {
+            black_box(legacy.evaluate(&test).unwrap());
+        },
+    );
+    let (cl, ca) = trainer.evaluate(&test)?;
+    let (ll, la) = legacy.evaluate(&test)?;
+    anyhow::ensure!(
+        cl.to_bits() == ll.to_bits() && ca.to_bits() == la.to_bits(),
+        "cached eval set and per-pass refill disagree: ({cl}, {ca}) vs ({ll}, {la})"
+    );
+
+    anyhow::ensure!(
+        builds == 0,
+        "steady-state eval constructed {builds} literals over {} passes",
+        pass_r.iters
+    );
+    anyhow::ensure!(
+        h2d_input == 0,
+        "steady-state eval uploaded {h2d_input} input buffers over {} passes",
+        pass_r.iters
+    );
+    if trainer.device_resident() {
+        anyhow::ensure!(
+            h2d_state == 0 && xfers == 0,
+            "device-resident eval performed {h2d_state} state uploads and \
+             {xfers} counted host transfers over {} passes",
+            pass_r.iters
+        );
+        println!("ok: steady-state eval pass is prep-free, upload-free, and transfer-free");
+    } else {
+        println!(
+            "ok: steady-state eval pass is literal-free and input-upload-free \
+             (host-mode per-pass state re-upload expected)"
+        );
+    }
+
+    if let Some(path) = json_out {
+        let report = EvalBenchReport {
+            model: cfg.model.clone(),
+            scheme: cfg.scheme.clone(),
+            passes: pass_r.iters,
+            batches_per_pass: batches,
+            examples: test.n,
+            mean_pass_ns: pass_r.mean_ns,
+            stddev_pass_ns: pass_r.stddev_ns,
+            min_pass_ns: pass_r.min_ns,
+            literal_builds: builds,
+            h2d_state,
+            h2d_input,
+            host_transfers: xfers,
+            device_resident: trainer.device_resident(),
+            telemetry: delta.to_json(),
+        };
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, report.to_json().to_string_pretty())?;
         println!("wrote bench json -> {path}");
     }
     Ok(())
@@ -390,7 +534,14 @@ fn main() -> Result<()> {
                 let iters = args.flag_parse::<u64>("iters")?.unwrap_or(50).max(1);
                 bench_step(&cfg, iters, args.flag("json"))?;
             }
-            other => bail!("unknown bench target '{other}' — try `repro bench step`"),
+            "eval" => {
+                let cfg = build_config(&args)?;
+                let passes = args.flag_parse::<u64>("iters")?.unwrap_or(10).max(1);
+                bench_eval(&cfg, passes, args.flag("json"))?;
+            }
+            other => {
+                bail!("unknown bench target '{other}' — try `repro bench step` or `repro bench eval`")
+            }
         },
         "trace" => match args.pos(0) {
             Some("summarize") => {

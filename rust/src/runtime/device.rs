@@ -42,13 +42,14 @@ impl DeviceBuf {
     }
 
     /// Upload a host literal as an *input-class* buffer (batch data,
-    /// scalars, the precision vector) — uncounted, like the host copies the
-    /// literal execute path performs internally.
+    /// scalars, the precision vector) — uncounted by
+    /// [`super::host_transfers`], like the host copies the literal execute
+    /// path performs internally, but tallied under the `device.h2d_input`
+    /// telemetry counter so the eval/step benches can assert a warmed
+    /// steady-state loop performs none.
     pub fn from_literal(client: &PjRtClient, lit: &Literal) -> Result<DeviceBuf> {
-        let buf = client
-            .buffer_from_host_literal(None, lit)
-            .map_err(|e| anyhow::anyhow!("uploading literal to device: {e}"))?;
-        Ok(DeviceBuf { buf })
+        crate::telemetry::count("device.h2d_input", 1);
+        Self::upload(client, lit)
     }
 
     /// Upload a *state* tensor (parameter/momentum) — counted against
@@ -57,7 +58,14 @@ impl DeviceBuf {
     pub fn from_state_literal(client: &PjRtClient, lit: &Literal) -> Result<DeviceBuf> {
         note_host_transfers(1);
         crate::telemetry::count("device.h2d_state", 1);
-        Self::from_literal(client, lit)
+        Self::upload(client, lit)
+    }
+
+    fn upload(client: &PjRtClient, lit: &Literal) -> Result<DeviceBuf> {
+        let buf = client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow::anyhow!("uploading literal to device: {e}"))?;
+        Ok(DeviceBuf { buf })
     }
 
     /// Download a *state* tensor back to the host — counted (direction
@@ -237,6 +245,24 @@ mod tests {
         let before = host_transfers();
         let _buf = DeviceBuf::from_literal(&c, &lit).unwrap();
         assert_eq!(host_transfers(), before, "batch-class uploads are free");
+    }
+
+    #[test]
+    fn input_and_state_uploads_tick_distinct_counters() {
+        let c = client();
+        let lit = literal_f32(&[1.0, 2.0], &[2]).unwrap();
+        let input_before = crate::telemetry::counter("device.h2d_input");
+        let state_before = crate::telemetry::counter("device.h2d_state");
+        let _i = DeviceBuf::from_literal(&c, &lit).unwrap();
+        assert_eq!(crate::telemetry::counter("device.h2d_input"), input_before + 1);
+        assert_eq!(crate::telemetry::counter("device.h2d_state"), state_before);
+        let _s = DeviceBuf::from_state_literal(&c, &lit).unwrap();
+        assert_eq!(
+            crate::telemetry::counter("device.h2d_input"),
+            input_before + 1,
+            "state uploads must not masquerade as input uploads"
+        );
+        assert_eq!(crate::telemetry::counter("device.h2d_state"), state_before + 1);
     }
 
     #[test]

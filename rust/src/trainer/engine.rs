@@ -24,6 +24,20 @@
 //!   PJRT build returns tuple results ([`crate::runtime::DeviceRun`]
 //!   `::Fetched`) — degraded transfer profile, identical numerics.
 //!
+//! Eval is transfer-free at steady state too: the first
+//! [`StepEngine::evaluate`] call batches the test set once into an
+//! [`EvalSet`] — per-batch pinned x/y literals with the tail-mask `valid`
+//! counts precomputed (`eval.set_builds` / `eval.set_build` span) — and the
+//! first device-executed pass uploads each batch's inputs once
+//! (`device.h2d_input`).  Eval inputs are precision-independent (the eval
+//! module quantizes in-graph from the `prec` pin), so every subsequent
+//! device-path pass performs zero host-side batch prep, zero literal
+//! builds, and zero input uploads; `repro bench eval` asserts exactly
+//! that.  Host mode hoists its per-pass parameter upload to once per pass
+//! (`device.h2d_state`) instead of once per batch inside every execute.
+//! `runtime.eval_set = false` restores the legacy per-batch refill path
+//! (identical numerics).
+//!
 //! Host copies of state happen only on demand: [`StepEngine::snapshot`]
 //! (checkpoints, rollback), [`StepEngine::restore`]/`reinit`, and
 //! fault-injection corruption.
@@ -61,6 +75,32 @@ enum ParamState {
     Host { params: Vec<Literal>, mom: Vec<Literal> },
     /// Device-resident buffers; step outputs become the next step's inputs.
     Device(DeviceState),
+}
+
+/// One precomputed eval batch: pinned host literals plus — filled lazily
+/// the first time a device-exec pass touches it — resident device copies.
+struct EvalBatch {
+    x: PinnedF32,
+    y: PinnedI32,
+    /// How many leading entries are real examples (the rest are wrapped
+    /// pads the accumulator masks off).
+    valid: usize,
+    x_dev: Option<DeviceBuf>,
+    y_dev: Option<DeviceBuf>,
+}
+
+/// The whole test set, batched once (`eval.set_builds` / `eval.set_build`
+/// span).  Eval inputs are precision-independent — the eval module
+/// quantizes in-graph from the `prec` pin — so the cache stays valid for
+/// the entire run; only a different dataset (fingerprint/length) or batch
+/// size forces a rebuild.  After the first device-exec pass every batch
+/// also holds resident x/y buffers, so steady-state eval passes perform
+/// zero host-side batch prep and zero input uploads.
+struct EvalSet {
+    fp: u64,
+    n: usize,
+    batch: usize,
+    batches: Vec<EvalBatch>,
 }
 
 /// One step's raw execution result, before state is written back.
@@ -160,8 +200,17 @@ pub struct StepEngine {
     /// writes.
     prec_cache: [f32; 6],
     /// Device copy of `prec_in`, re-uploaded only when the triple moves
-    /// (cleared by `sync_prec`).  `None` in host mode.
+    /// (cleared by `sync_prec`).  `None` in host mode until a hoisted eval
+    /// pass uploads one.
     prec_dev: Option<DeviceBuf>,
+    /// `runtime.eval_set`: use the precomputed [`EvalSet`] path (default);
+    /// `false` selects the legacy per-batch refill path.
+    use_eval_set: bool,
+    /// The cached test set, built on the first `evaluate()` call.
+    eval_set: Option<EvalSet>,
+    /// Host mode tried to hoist its per-pass parameter upload and the
+    /// device rejected it; stay on the per-batch literal path silently.
+    host_eval_upload_broken: bool,
     /// Indices of each class's slots in the stat vectors.
     site_idx: [Vec<usize>; 3],
     evec_len: usize,
@@ -248,6 +297,9 @@ impl StepEngine {
             ey_in: PinnedI32::zeros(&[eval_batch])?,
             prec_cache: [f32::NAN; 6],
             prec_dev: None,
+            use_eval_set: cfg.eval_set,
+            eval_set: None,
+            host_eval_upload_broken: false,
             model: cfg.model.clone(),
             agg: cfg.agg,
             client,
@@ -455,43 +507,16 @@ impl StepEngine {
         })
     }
 
-    /// Execute the eval module on the current `ex`/`ey`/`prec` pins against
-    /// whichever state mode is live; returns host output literals.
-    fn run_eval(&mut self) -> Result<Vec<Literal>> {
-        self.ensure_prec_dev()?;
-        match &self.state {
-            ParamState::Device(ds) => {
-                let ex = DeviceBuf::from_literal(&self.client, self.ex_in.literal())?;
-                let ey = DeviceBuf::from_literal(&self.client, self.ey_in.literal())?;
-                let prec_b = self.prec_dev.as_ref().expect("prec_dev ensured above");
-                let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(self.n_params + 3);
-                inputs.extend(ds.param_buffers());
-                inputs.push(ex.buffer());
-                inputs.push(ey.buffer());
-                inputs.push(prec_b.buffer());
-                match self.exe_eval.run_device(&inputs)? {
-                    DeviceRun::Resident(bufs) => bufs
-                        .iter()
-                        .map(|b| b.to_literal_sync().map_err(|e| anyhow::anyhow!("{e}")))
-                        .collect(),
-                    DeviceRun::Fetched(outs) => Ok(outs),
-                }
-            }
-            ParamState::Host { params, .. } => {
-                // literal path re-uploads all P parameters per eval batch
-                crate::runtime::note_host_transfers(self.n_params as u64);
-                let mut inputs: Vec<&Literal> = Vec::with_capacity(self.n_params + 3);
-                inputs.extend(params.iter());
-                inputs.push(self.ex_in.literal());
-                inputs.push(self.ey_in.literal());
-                inputs.push(self.prec_in.literal());
-                self.exe_eval.run(&inputs)
-            }
-        }
-    }
-
     /// Evaluate on a full dataset at the given precision; returns
     /// (mean loss, accuracy).
+    ///
+    /// The default path ([`EvalSet`], `runtime.eval_set = true`) batches the
+    /// test set once on the first call and — on device-executed passes —
+    /// uploads each batch's inputs once, so steady-state eval passes perform
+    /// zero literal construction, zero host-side batch prep, and zero input
+    /// uploads.  `runtime.eval_set = false` selects the legacy per-batch
+    /// refill path (identical numerics: both feed the same batches through
+    /// the same module and [`EvalAccum`]).
     ///
     /// With per-example eval artifacts the tail batch is masked exactly:
     /// only the first `valid` outputs of each batch are accumulated, so a
@@ -499,8 +524,158 @@ impl StepEngine {
     /// to a batch-size-1 reference (see [`EvalAccum`]).  Legacy scalar
     /// artifacts fall back to the old `valid/batch` rescale and warn once.
     pub fn evaluate(&mut self, test: &Dataset, prec: &PrecState) -> Result<(f32, f32)> {
-        let batch = self.eval_batch_size();
         self.sync_prec(prec)?;
+        if self.use_eval_set {
+            self.evaluate_set(test)
+        } else {
+            self.evaluate_refill(test)
+        }
+    }
+
+    /// Precomputed-set eval pass: (re)build the [`EvalSet`] if the dataset
+    /// changed, hoist per-pass device setup, then score every cached batch.
+    fn evaluate_set(&mut self, test: &Dataset) -> Result<(f32, f32)> {
+        let fp = test.fingerprint();
+        let batch = self.eval_batch_size();
+        let stale = match &self.eval_set {
+            Some(s) => s.fp != fp || s.n != test.n || s.batch != batch,
+            None => true,
+        };
+        if stale {
+            let set = self.build_eval_set(test, fp)?;
+            self.eval_set = Some(set);
+        }
+        let host_pbufs = self.prepare_device_eval()?;
+        // Take the set out so the pass can cache device buffers into it
+        // while `self` is borrowed for execution.
+        let mut set = self.eval_set.take().expect("eval set built above");
+        let result = self.eval_pass_set(&mut set, host_pbufs.as_deref());
+        self.eval_set = Some(set);
+        result
+    }
+
+    /// Batch the test set once: per-batch pinned x/y literals with the
+    /// tail-mask `valid` count precomputed.  Device copies are attached
+    /// lazily by the first device-executed pass.
+    fn build_eval_set(&mut self, test: &Dataset, fp: u64) -> Result<EvalSet> {
+        let _s = crate::telemetry::span!("eval.set_build");
+        crate::telemetry::count("eval.set_builds", 1);
+        let batch = self.eval_batch_size();
+        let mut eb = EvalBatcher::new(test, batch);
+        let mut batches = Vec::with_capacity(eb.num_batches());
+        while let Some(valid) = eb.next_into(&mut self.ex_buf, &mut self.ey_buf) {
+            let mut x = PinnedF32::zeros(&self.eval_x_shape)?;
+            x.fill(&self.ex_buf)?;
+            let mut y = PinnedI32::zeros(&[batch])?;
+            y.fill(&self.ey_buf)?;
+            batches.push(EvalBatch { x, y, valid, x_dev: None, y_dev: None });
+        }
+        Ok(EvalSet { fp, n: test.n, batch, batches })
+    }
+
+    /// Per-pass device setup for eval.
+    ///
+    /// Device mode: refresh the resident precision buffer if the triple
+    /// moved; returns `None` (the state buffers are already on device).
+    /// Host mode: hoist the parameter uploads to **once per pass** — the
+    /// pre-hoist path re-uploaded all P parameters inside every per-batch
+    /// execute — counted under `device.h2d_state`; returns the uploaded
+    /// buffers, or `None` if device buffers are unavailable, in which case
+    /// the per-batch literal path runs as before.
+    fn prepare_device_eval(&mut self) -> Result<Option<Vec<DeviceBuf>>> {
+        if matches!(self.state, ParamState::Device(_)) {
+            self.ensure_prec_dev()?;
+            return Ok(None);
+        }
+        if self.host_eval_upload_broken {
+            return Ok(None);
+        }
+        let uploaded = (|| -> Result<(Vec<DeviceBuf>, Option<DeviceBuf>)> {
+            let params = match &self.state {
+                ParamState::Host { params, .. } => params,
+                ParamState::Device(_) => unreachable!("handled above"),
+            };
+            let bufs = params
+                .iter()
+                .map(|l| DeviceBuf::from_state_literal(&self.client, l))
+                .collect::<Result<Vec<_>>>()?;
+            let prec = match self.prec_dev {
+                None => Some(DeviceBuf::from_literal(&self.client, self.prec_in.literal())?),
+                Some(_) => None,
+            };
+            Ok((bufs, prec))
+        })();
+        match uploaded {
+            Ok((bufs, prec)) => {
+                if let Some(p) = prec {
+                    self.prec_dev = Some(p);
+                }
+                Ok(Some(bufs))
+            }
+            Err(e) => {
+                crate::log_warn!(
+                    "engine: per-pass eval parameter upload unavailable ({e}); \
+                     staying on the per-batch literal path"
+                );
+                self.host_eval_upload_broken = true;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Score every batch of a prepared [`EvalSet`].  `host_pbufs` carries
+    /// host mode's per-pass parameter uploads; device mode reads the
+    /// resident state directly.
+    fn eval_pass_set(
+        &mut self,
+        set: &mut EvalSet,
+        host_pbufs: Option<&[DeviceBuf]>,
+    ) -> Result<(f32, f32)> {
+        let mut acc = EvalAccum::new();
+        let mut warned = false;
+        let device_exec = host_pbufs.is_some() || matches!(self.state, ParamState::Device(_));
+        for b in set.batches.iter_mut() {
+            let _s = crate::telemetry::span!("engine.eval_batch");
+            crate::telemetry::count("eval.batches", 1);
+            if device_exec && b.x_dev.is_none() {
+                // First device-executed pass over this set: inputs become
+                // resident here and every later pass uploads nothing.
+                b.x_dev = Some(DeviceBuf::from_literal(&self.client, b.x.literal())?);
+                b.y_dev = Some(DeviceBuf::from_literal(&self.client, b.y.literal())?);
+            }
+            let outs = match (&self.state, host_pbufs) {
+                (ParamState::Device(ds), _) => {
+                    let params: Vec<&PjRtBuffer> = ds.param_buffers().collect();
+                    self.eval_exec_device(
+                        &params,
+                        b.x_dev.as_ref().expect("cached above").buffer(),
+                        b.y_dev.as_ref().expect("cached above").buffer(),
+                    )?
+                }
+                (ParamState::Host { .. }, Some(pb)) => {
+                    let params: Vec<&PjRtBuffer> = pb.iter().map(|d| d.buffer()).collect();
+                    self.eval_exec_device(
+                        &params,
+                        b.x_dev.as_ref().expect("cached above").buffer(),
+                        b.y_dev.as_ref().expect("cached above").buffer(),
+                    )?
+                }
+                (ParamState::Host { .. }, None) => {
+                    self.eval_exec_literals(b.x.literal(), b.y.literal())?
+                }
+            };
+            self.accumulate_eval(&outs, b.valid, &mut acc, &mut warned)?;
+        }
+        Ok(acc.finish())
+    }
+
+    /// Legacy eval pass (`runtime.eval_set = false`): stream the set through
+    /// the shared `ex`/`ey` pins, refilled per batch.  Still benefits from
+    /// the per-pass parameter hoist in host mode.
+    fn evaluate_refill(&mut self, test: &Dataset) -> Result<(f32, f32)> {
+        let batch = self.eval_batch_size();
+        let host_pbufs = self.prepare_device_eval()?;
+        let device_exec = host_pbufs.is_some() || matches!(self.state, ParamState::Device(_));
         let mut eb = EvalBatcher::new(test, batch);
         let mut acc = EvalAccum::new();
         let mut warned = false;
@@ -509,33 +684,107 @@ impl StepEngine {
             crate::telemetry::count("eval.batches", 1);
             self.ex_in.fill(&self.ex_buf)?;
             self.ey_in.fill(&self.ey_buf)?;
-            let outs = self.run_eval()?;
-            if self.eval_per_example {
-                let lv = to_vec_f32(&outs[0])?;
-                let cv = to_vec_f32(&outs[1])?;
-                anyhow::ensure!(
-                    lv.len() == batch && cv.len() == batch,
-                    "per-example eval output arity"
-                );
-                acc.add_examples(&lv[..valid], &cv[..valid]);
-            } else {
-                if valid != batch && !warned {
-                    crate::log_warn!(
-                        "engine: scalar eval artifacts rescale the wrapped tail \
-                         ({valid}/{batch}) approximately; re-run `make artifacts` \
-                         for exact per-example eval"
-                    );
-                    warned = true;
+            let outs = if device_exec {
+                let x = DeviceBuf::from_literal(&self.client, self.ex_in.literal())?;
+                let y = DeviceBuf::from_literal(&self.client, self.ey_in.literal())?;
+                match (&self.state, host_pbufs.as_deref()) {
+                    (ParamState::Device(ds), _) => {
+                        let params: Vec<&PjRtBuffer> = ds.param_buffers().collect();
+                        self.eval_exec_device(&params, x.buffer(), y.buffer())?
+                    }
+                    (ParamState::Host { .. }, Some(pb)) => {
+                        let params: Vec<&PjRtBuffer> = pb.iter().map(|d| d.buffer()).collect();
+                        self.eval_exec_device(&params, x.buffer(), y.buffer())?
+                    }
+                    (ParamState::Host { .. }, None) => {
+                        unreachable!("device_exec implies device buffers")
+                    }
                 }
-                acc.add_batch_sums(
-                    outs[0].get_first_element::<f32>()?,
-                    outs[1].get_first_element::<f32>()?,
-                    valid,
-                    batch,
-                );
-            }
+            } else {
+                self.eval_exec_literals(self.ex_in.literal(), self.ey_in.literal())?
+            };
+            self.accumulate_eval(&outs, valid, &mut acc, &mut warned)?;
         }
         Ok(acc.finish())
+    }
+
+    /// Execute the eval module against device inputs (`params` is either
+    /// the resident state or this pass's hoisted uploads); returns host
+    /// output literals.
+    fn eval_exec_device(
+        &self,
+        params: &[&PjRtBuffer],
+        x: &PjRtBuffer,
+        y: &PjRtBuffer,
+    ) -> Result<Vec<Literal>> {
+        let prec_b = self.prec_dev.as_ref().expect("prec_dev prepared for device eval");
+        let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(self.n_params + 3);
+        inputs.extend_from_slice(params);
+        inputs.push(x);
+        inputs.push(y);
+        inputs.push(prec_b.buffer());
+        match self.exe_eval.run_device(&inputs)? {
+            DeviceRun::Resident(bufs) => bufs
+                .iter()
+                .map(|b| b.to_literal_sync().map_err(|e| anyhow::anyhow!("{e}")))
+                .collect(),
+            DeviceRun::Fetched(outs) => Ok(outs),
+        }
+    }
+
+    /// Host-literal eval execution (device buffers unavailable): the
+    /// execute call re-uploads all P parameters internally, counted per
+    /// batch as before the hoist.
+    fn eval_exec_literals(&self, x: &Literal, y: &Literal) -> Result<Vec<Literal>> {
+        let params = match &self.state {
+            ParamState::Host { params, .. } => params,
+            ParamState::Device(_) => unreachable!("literal eval path in device mode"),
+        };
+        crate::runtime::note_host_transfers(self.n_params as u64);
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(self.n_params + 3);
+        inputs.extend(params.iter());
+        inputs.push(x);
+        inputs.push(y);
+        inputs.push(self.prec_in.literal());
+        self.exe_eval.run(&inputs)
+    }
+
+    /// Fold one batch's outputs into the accumulator: exact per-example
+    /// tail masking when the artifacts provide it, the legacy
+    /// `valid/batch` rescale (warned once) otherwise.
+    fn accumulate_eval(
+        &self,
+        outs: &[Literal],
+        valid: usize,
+        acc: &mut EvalAccum,
+        warned: &mut bool,
+    ) -> Result<()> {
+        let batch = self.eval_batch_size();
+        if self.eval_per_example {
+            let lv = to_vec_f32(&outs[0])?;
+            let cv = to_vec_f32(&outs[1])?;
+            anyhow::ensure!(
+                lv.len() == batch && cv.len() == batch,
+                "per-example eval output arity"
+            );
+            acc.add_examples(&lv[..valid], &cv[..valid]);
+        } else {
+            if valid != batch && !*warned {
+                crate::log_warn!(
+                    "engine: scalar eval artifacts rescale the wrapped tail \
+                     ({valid}/{batch}) approximately; re-run `make artifacts` \
+                     for exact per-example eval"
+                );
+                *warned = true;
+            }
+            acc.add_batch_sums(
+                outs[0].get_first_element::<f32>()?,
+                outs[1].get_first_element::<f32>()?,
+                valid,
+                batch,
+            );
+        }
+        Ok(())
     }
 
     /// Copy the current parameters and momenta to host literals

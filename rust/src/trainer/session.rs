@@ -14,6 +14,7 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -29,11 +30,15 @@ use crate::util::Stopwatch;
 use super::{checkpoint, Trainer};
 
 /// One experiment: config + data + trainer + recovery state.
+///
+/// Datasets are `Arc`-shared out of the process-wide [`crate::data::cache`]:
+/// sweep workers running many schemes over the same source + sizes parse
+/// MNIST once and point at one allocation.
 pub struct Session {
     cfg: ExperimentConfig,
     trainer: Trainer,
-    train: Dataset,
-    test: Dataset,
+    train: Arc<Dataset>,
+    test: Arc<Dataset>,
     injector: Rc<RefCell<FaultInjector>>,
 }
 
@@ -67,11 +72,14 @@ impl Session {
             rt.arm_faults(injector.clone());
         }
 
+        // The cache sits below the retry/injection wrapper: `read-fail`
+        // specs still fire on every run's load call; only a successful
+        // load is memoized and shared.
         let (train, test, source) = retry_with_backoff("dataset load", 3, 50, |_| {
             if let Some(e) = injector.borrow_mut().take_read_failure("dataset") {
                 return Err(e);
             }
-            Ok(crate::data::load_default(cfg.train_n, cfg.test_n))
+            Ok(crate::data::cache::load_default_cached(cfg.train_n, cfg.test_n))
         })?;
         crate::log_info!(
             "experiment: scheme={} model={} iters={} data={:?} (train={}, test={})",

@@ -1,8 +1,9 @@
-//! Exact evaluation on non-multiple test sets, without artifacts: a
-//! deterministic mock scorer drives [`EvalBatcher`] batches through
-//! [`EvalAccum`], pinning the masking contract the engine relies on —
-//! wrapped tail padding never leaks into the totals, and the result is
-//! bit-identical across batch sizes.
+//! Exact evaluation on non-multiple test sets: a deterministic mock scorer
+//! drives [`EvalBatcher`] batches through [`EvalAccum`], pinning the
+//! masking contract the engine relies on — wrapped tail padding never
+//! leaks into the totals, and the result is bit-identical across batch
+//! sizes.  The artifact-backed tests at the bottom pin the same contract
+//! for the engine's cached eval set vs the legacy per-batch refill path.
 
 use qedps::data::{synth, Dataset, EvalBatcher, IMG_PIXELS};
 use qedps::trainer::EvalAccum;
@@ -82,6 +83,60 @@ fn unmasked_padding_contaminates_the_tail() {
     );
 }
 
+/// Batch the set once (the engine's `EvalSet` strategy: freeze every
+/// batch's x/y/valid up front) and replay the frozen batches through the
+/// scorer, instead of re-pulling from the batcher each pass.
+fn eval_precomputed(ds: &Dataset, batch: usize, passes: usize) -> Vec<(f32, f32)> {
+    let mut e = EvalBatcher::new(ds, batch);
+    let mut x = vec![0.0f32; batch * IMG_PIXELS];
+    let mut y = vec![0i32; batch];
+    let mut frozen: Vec<(Vec<f32>, Vec<i32>, usize)> = Vec::with_capacity(e.num_batches());
+    while let Some(valid) = e.next_into(&mut x, &mut y) {
+        frozen.push((x.clone(), y.clone(), valid));
+    }
+    (0..passes)
+        .map(|_| {
+            let mut acc = EvalAccum::new();
+            for (fx, fy, valid) in &frozen {
+                let mut loss_vec = Vec::with_capacity(batch);
+                let mut correct_vec = Vec::with_capacity(batch);
+                for b in 0..batch {
+                    let (l, c) = score(&fx[b * IMG_PIXELS..(b + 1) * IMG_PIXELS], fy[b]);
+                    loss_vec.push(l);
+                    correct_vec.push(c);
+                }
+                acc.add_examples(&loss_vec[..*valid], &correct_vec[..*valid]);
+            }
+            acc.finish()
+        })
+        .collect()
+}
+
+#[test]
+fn precomputed_batches_match_streaming_refill_bit_for_bit() {
+    // 25 examples at batches 10 and 7 (both leave a wrapped tail): freezing
+    // the batches once and replaying them must equal re-batching every
+    // pass, on every pass, at every batch size.
+    let ds = synth::generate(25, 11);
+    for batch in [1, 7, 10] {
+        let streaming = eval_at_batch(&ds, batch);
+        for (pass, &(l, a)) in eval_precomputed(&ds, batch, 3).iter().enumerate() {
+            assert_eq!(
+                l.to_bits(),
+                streaming.0.to_bits(),
+                "batch {batch} pass {pass}: loss {l} vs {}",
+                streaming.0
+            );
+            assert_eq!(
+                a.to_bits(),
+                streaming.1.to_bits(),
+                "batch {batch} pass {pass}: acc {a} vs {}",
+                streaming.1
+            );
+        }
+    }
+}
+
 #[test]
 fn multiple_sized_set_needs_no_masking() {
     // when batch | n the legacy rescale is a no-op and both paths agree
@@ -105,4 +160,74 @@ fn multiple_sized_set_needs_no_masking() {
     let (l, a) = acc.finish();
     assert_eq!(l.to_bits(), exact_l.to_bits());
     assert_eq!(a.to_bits(), exact_a.to_bits());
+}
+
+/// The engine's cached eval set must score a non-multiple test set
+/// bit-identically to the legacy per-batch refill path, stay stable across
+/// repeated passes, and build the set exactly once.
+#[test]
+fn engine_eval_set_matches_refill_path_bit_for_bit() {
+    let mut rt = qedps::runtime::Runtime::create().unwrap();
+    let mut cfg = qedps::config::ExperimentConfig::default();
+    cfg.model = "mlp".into();
+    assert!(cfg.eval_set, "the cached eval set is the default");
+    let test = synth::generate(333, 13);
+
+    let mut cached = qedps::trainer::Trainer::new(&mut rt, cfg.clone()).unwrap();
+    let builds0 = qedps::telemetry::counter("eval.set_builds");
+    let first = cached.evaluate(&test).unwrap();
+    assert_eq!(
+        qedps::telemetry::counter("eval.set_builds"),
+        builds0 + 1,
+        "first evaluate builds the set once"
+    );
+    let second = cached.evaluate(&test).unwrap();
+    let third = cached.evaluate(&test).unwrap();
+    assert_eq!(
+        qedps::telemetry::counter("eval.set_builds"),
+        builds0 + 1,
+        "later passes reuse the cached set"
+    );
+    for (l, a) in [second, third] {
+        assert_eq!(first.0.to_bits(), l.to_bits(), "loss drifted across passes");
+        assert_eq!(first.1.to_bits(), a.to_bits(), "acc drifted across passes");
+    }
+
+    let mut refill_cfg = cfg.clone();
+    refill_cfg.eval_set = false;
+    let mut refill = qedps::trainer::Trainer::new(&mut rt, refill_cfg).unwrap();
+    let (ll, la) = refill.evaluate(&test).unwrap();
+    assert_eq!(first.0.to_bits(), ll.to_bits(), "loss: {} vs {ll}", first.0);
+    assert_eq!(first.1.to_bits(), la.to_bits(), "acc: {} vs {la}", first.1);
+}
+
+/// Swapping datasets between `evaluate()` calls must rebuild the cached
+/// set (fingerprint staleness) and still score each set correctly.
+#[test]
+fn engine_eval_set_rebuilds_when_the_dataset_changes() {
+    let mut rt = qedps::runtime::Runtime::create().unwrap();
+    let mut cfg = qedps::config::ExperimentConfig::default();
+    cfg.model = "mlp".into();
+    let set_a = synth::generate(333, 13);
+    let set_b = synth::generate(207, 14);
+
+    let mut t = qedps::trainer::Trainer::new(&mut rt, cfg.clone()).unwrap();
+    let builds0 = qedps::telemetry::counter("eval.set_builds");
+    let a_first = t.evaluate(&set_a).unwrap();
+    let b_swapped = t.evaluate(&set_b).unwrap();
+    let a_again = t.evaluate(&set_a).unwrap();
+    assert_eq!(
+        qedps::telemetry::counter("eval.set_builds"),
+        builds0 + 3,
+        "each dataset swap rebuilds the set"
+    );
+    assert_eq!(a_first.0.to_bits(), a_again.0.to_bits());
+    assert_eq!(a_first.1.to_bits(), a_again.1.to_bits());
+
+    // a fresh trainer that only ever saw set B must agree with the
+    // swapped-in evaluation of set B above
+    let mut fresh = qedps::trainer::Trainer::new(&mut rt, cfg).unwrap();
+    let b_fresh = fresh.evaluate(&set_b).unwrap();
+    assert_eq!(b_swapped.0.to_bits(), b_fresh.0.to_bits());
+    assert_eq!(b_swapped.1.to_bits(), b_fresh.1.to_bits());
 }

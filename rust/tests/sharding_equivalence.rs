@@ -130,9 +130,19 @@ fn telemetry_counters_merge_identically_across_jobs() {
         serial.counter("engine.steps") >= base.iters * schemes.len() as u64,
         "every run's steps must be counted"
     );
+    // the process-wide dataset cache's hit/miss split depends on which
+    // test warmed the key first, not on dispatch mode — exclude it from
+    // the equality and pin it separately in dataset_cache_hits_across_jobs
+    let strip_cache = |s: &qedps::telemetry::Snapshot| -> std::collections::BTreeMap<String, u64> {
+        s.counters()
+            .iter()
+            .filter(|(k, _)| !k.starts_with("data.cache_"))
+            .map(|(k, &v)| (k.clone(), v))
+            .collect()
+    };
     assert_eq!(
-        serial.counters(),
-        threaded.counters(),
+        strip_cache(&serial),
+        strip_cache(&threaded),
         "--jobs 2 must merge to the same counter totals as a serial sweep"
     );
     for (name, h) in serial.spans() {
@@ -142,6 +152,37 @@ fn telemetry_counters_merge_identically_across_jobs() {
             "span '{name}' count must survive the worker merge"
         );
     }
+}
+
+#[test]
+fn dataset_cache_hits_across_jobs() {
+    // sizes unique to this test, so no other test in the process warms the
+    // cache key: a --jobs 2 sweep over three schemes must parse the data
+    // exactly once and serve every other run from the shared cache
+    let mut base = sweep_cfg("datacache");
+    base.train_n = 601;
+    base.test_n = 201;
+    let schemes = ["qedps", "float", "fixed13"];
+
+    let before = qedps::telemetry::snapshot();
+    coordinator::compare_schemes_sharded(
+        &base,
+        &schemes,
+        &ShardOpts { jobs: 2, shard: None },
+    )
+    .unwrap();
+    let delta = qedps::telemetry::snapshot().diff(&before);
+
+    assert_eq!(
+        delta.counter("data.cache_misses"),
+        1,
+        "one dataset parse per process for this key"
+    );
+    assert_eq!(
+        delta.counter("data.cache_hits"),
+        schemes.len() as u64 - 1,
+        "every other run shares the cached datasets"
+    );
 }
 
 #[test]

@@ -60,6 +60,11 @@ elif [ -f artifacts/manifest.json ] || [ -n "${QEDPS_ARTIFACTS:-}" ]; then
     # bench step exits nonzero if the timed loop constructs literals or, on
     # a device-resident run, copies state across host<->device
     cargo run --release -- bench step --iters 5 --quiet
+    echo "== tier1: eval-pass invariants (cached eval set stays flat) =="
+    # bench eval exits nonzero if steady-state eval passes construct
+    # literals, upload inputs, or (device-resident) touch state/host
+    # transfers; --json exercises the pinned report schema end to end
+    cargo run --release -- bench eval --iters 3 --quiet --json target/tier1_bench_eval.json
 else
     echo "== tier1: smoke skipped (no artifacts; run 'make artifacts') =="
 fi
